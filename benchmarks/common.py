@@ -1,0 +1,40 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock microseconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def time_to_target(history: Dict[str, List[float]], f_target: float) -> float:
+    """Simulated seconds until fval <= target (inf if never)."""
+    for f, t in zip(history["fval"], history["time"]):
+        if f <= f_target:
+            return t
+    return float("inf")
+
+
+def best_f(*histories, rel: float = 0.01) -> float:
+    """A common reachable target: rel-relative above the best final value
+    (1% default — the accuracy regime the paper's figures compare at)."""
+    best = min(h["fval"][-1] for h in histories)
+    return best * (1.0 + rel) + 1e-6
+
+
+def row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,63 @@
+"""Fig. 11: OverSketched Newton (unit step) vs gradient descent and NAG with
+backtracking line search, EPSILON profile.  Paper headline: >= 9x faster than
+first-order methods in simulated end-to-end time."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import best_f, time_to_target
+from repro.core import (LogisticRegression, NewtonConfig, OverSketchConfig,
+                        oversketched_newton)
+from repro.core.straggler import StragglerModel
+from repro.optim import FirstOrderConfig, first_order
+
+
+def run(quick: bool = True):
+    from repro.data import make_logistic_dataset
+    # ill-conditioned features: the regime where Newton's advantage is ~10x
+    data = make_logistic_dataset(jax.random.PRNGKey(5), 12_000, 100,
+                                 n_test=1000, cond=100.0)
+    d = data.x.shape[1]
+    obj = LogisticRegression(lam=1e-5)
+    w0 = jnp.zeros(d)
+    model = StragglerModel()
+
+    sk = OverSketchConfig(((15 * d) // 256 + 1) * 256, 256, 0.25)
+    osn = oversketched_newton(
+        obj, data, w0, NewtonConfig(iters=8 if quick else 12, sketch=sk,
+                                    unit_step=False, coded_block_rows=256),
+        model=model).history
+    fo_iters = 150 if quick else 300
+    gd = first_order(obj, data, w0,
+                     FirstOrderConfig(iters=fo_iters, method="gd",
+                                      policy="ignore", num_workers=100,
+                                      backtracking=True), model=model)
+    nag = first_order(obj, data, w0,
+                      FirstOrderConfig(iters=fo_iters, method="nag",
+                                       policy="ignore", num_workers=100,
+                                       backtracking=True), model=model)
+    sgd = first_order(obj, data, w0,
+                      FirstOrderConfig(iters=fo_iters, method="sgd",
+                                       batch_fraction=0.2, lr=0.5,
+                                       backtracking=False,
+                                       num_workers=100), model=model)
+
+    target = best_f(osn)   # the Newton optimum is the bar (paper's framing)
+    rows = []
+    for name, h in [("osn", osn), ("gd_backtrack", gd),
+                    ("nag_backtrack", nag), ("sgd20", sgd)]:
+        t = time_to_target(h, target)
+        rows.append({
+            "name": f"fig11_{name}",
+            "us": (t if t != float("inf") else h["time"][-1]) * 1e6,
+            "derived": (f"t_to_target={t if t != float('inf') else -1:.2f};"
+                        f"final_f={h['fval'][-1]:.5f}"),
+        })
+    t_osn = time_to_target(osn, target)
+    t_best_fo = min(time_to_target(gd, target), time_to_target(nag, target))
+    ratio = (t_best_fo / max(t_osn, 1e-9)) if t_best_fo != float("inf") \
+        else float(gd["time"][-1] / max(t_osn, 1e-9))
+    rows.append({"name": "fig11_speedup_vs_first_order", "us": 0.0,
+                 "derived": f"ratio>={ratio:.1f}x"})
+    return rows

@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs pure-jnp reference.
+
+On this container the interpreter dominates wall-clock, so the *reference*
+implementations provide the meaningful CPU numbers and the Pallas variants
+are validated for correctness+shape coverage; on TPU the same harness times
+the compiled kernels.  Derived column reports achieved GFLOP/s of the ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.kernels import ops, ref
+
+
+def run(quick: bool = True):
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # count-sketch apply
+    k, n, d, b = (8, 4096, 256, 256) if quick else (10, 20_000, 1000, 512)
+    kh, ks, ka = jax.random.split(key, 3)
+    h = jax.random.randint(kh, (k, n), 0, b, dtype=jnp.int32)
+    sg = jax.random.rademacher(ks, (k, n), dtype=jnp.float32)
+    a = jax.random.normal(ka, (n, d))
+    f_ref = jax.jit(lambda: ref.count_sketch_apply(h, sg, a, b))
+    us = time_fn(f_ref)
+    flops = 2.0 * k * n * d
+    rows.append({"name": "kernel_count_sketch_ref", "us": us,
+                 "derived": f"gflops={flops/us/1e3:.2f};shape=({k},{n},{d})"})
+    out_p = ops.count_sketch_apply(h, sg, a, b)
+    out_r = f_ref()
+    err = float(jnp.abs(out_p - out_r).max())
+    rows.append({"name": "kernel_count_sketch_pallas_check", "us": 0.0,
+                 "derived": f"max_err={err:.2e}"})
+
+    # oversketch gram
+    a_t = jax.random.normal(key, (k, b, d))
+    surv = jnp.ones((k,), bool).at[0].set(False)
+    f_ref2 = jax.jit(lambda: ref.oversketch_gram(a_t, surv))
+    us2 = time_fn(f_ref2)
+    flops2 = 2.0 * k * b * d * d
+    rows.append({"name": "kernel_oversketch_gram_ref", "us": us2,
+                 "derived": f"gflops={flops2/us2/1e3:.2f}"})
+    err2 = float(jnp.abs(ops.oversketch_gram(a_t, surv) - f_ref2()).max())
+    rows.append({"name": "kernel_oversketch_gram_pallas_check", "us": 0.0,
+                 "derived": f"max_err={err2:.2e}"})
+
+    # coded matvec
+    w, bb, s = (25, 128, 2048) if quick else (64, 256, 8192)
+    enc = jax.random.normal(key, (w, bb, s))
+    x = jax.random.normal(kh, (s,))
+    er = jnp.zeros((w,), bool).at[3].set(True)
+    f_ref3 = jax.jit(lambda: ref.coded_block_matvec(enc, x, er))
+    us3 = time_fn(f_ref3)
+    gb = enc.size * 4 / 1e9
+    rows.append({"name": "kernel_coded_matvec_ref", "us": us3,
+                 "derived": f"gbps={gb/(us3/1e6):.2f}"})
+    err3 = float(jnp.abs(ops.coded_block_matvec(enc, x, er) - f_ref3()).max())
+    rows.append({"name": "kernel_coded_matvec_pallas_check", "us": 0.0,
+                 "derived": f"max_err={err3:.2e}"})
+    return rows

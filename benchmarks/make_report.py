@@ -1,0 +1,102 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from sweep JSONs.
+
+  PYTHONPATH=src python -m benchmarks.make_report \
+      --single sweep_single_pod.json --multi sweep_multi_pod.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(cells):
+    lines = [
+        "| arch | shape | mesh | status | args GB/chip | temps GB/chip | "
+        "HLO coll GB/chip | collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        mesh = "x".join(str(v) for v in c.get("mesh", {}).values()) or "-"
+        if "skipped" in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | {mesh} | SKIP "
+                         f"({c['skipped'][:40]}...) | - | - | - | - |")
+            continue
+        if "error" in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | {mesh} | "
+                         f"FAIL {c['error'][:60]} | - | - | - | - |")
+            continue
+        mem = c["memory"]
+        colls = ",".join(f"{k.split('-')[-1][:3]}:{v/1e9:.1f}G"
+                         for k, v in sorted(c.get("collectives", {}).items()))
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {mesh} | ok | "
+            f"{_fmt_bytes(mem['argument_bytes'])} | "
+            f"{_fmt_bytes(mem['temp_bytes'])} | "
+            f"{_fmt_bytes(c['collective_bytes_per_chip'])} | {colls} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells):
+    lines = [
+        "| arch | shape | c (ms) | m (ms) | x (ms) | bound | "
+        "MODEL_FLOPs/chip | useful/HLO | MFU bound |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if "skipped" in c or "error" in c or "analytic" not in c:
+            continue
+        a = c["analytic"]
+        t = a["roofline_seconds"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {1e3*t['compute']:.2f} | "
+            f"{1e3*t['memory']:.2f} | {1e3*t['collective']:.2f} | "
+            f"{a['bottleneck']} | {c['model_flops_per_chip']:.2e} | "
+            f"{c['useful_flop_fraction']:.2f} | {a['mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+def summarize(cells):
+    ok = [c for c in cells if "skipped" not in c and "error" not in c]
+    skip = [c for c in cells if "skipped" in c]
+    fail = [c for c in cells if "error" in c]
+    return ok, skip, fail
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single", type=str, required=True)
+    ap.add_argument("--multi", type=str, default=None)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    with open(args.single) as f:
+        single = json.load(f)
+    out = []
+    ok, skip, fail = summarize(single)
+    out.append(f"### Single-pod (16x16): {len(ok)} ok, {len(skip)} skipped "
+               f"(documented), {len(fail)} failed\n")
+    out.append(dryrun_table(single))
+    out.append("\n### Roofline (single-pod, analytic terms)\n")
+    out.append(roofline_table(single))
+    if args.multi:
+        with open(args.multi) as f:
+            multi = json.load(f)
+        ok, skip, fail = summarize(multi)
+        out.append(f"\n### Multi-pod (2x16x16): {len(ok)} ok, {len(skip)} "
+                   f"skipped, {len(fail)} failed\n")
+        out.append(dryrun_table(multi))
+    text = "\n".join(out)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,42 @@
+"""Roofline extraction for the benchmark run: a reduced-mesh dry-run cell
+(per-arch smoke at 8 placeholder devices in a subprocess keeps this fast and
+keeps the main process single-device) + the analytic full-mesh terms for
+every (arch x shape) cell — the full table lives in EXPERIMENTS.md and the
+sweep JSON produced by `python -m repro.launch.dryrun --all`."""
+from __future__ import annotations
+
+from repro.launch import analytic
+from repro.launch.dryrun import PEAK_FLOPS, HBM_BW, ICI_BW
+from repro.models.registry import SHAPES, get_bundle, get_config
+
+
+def run(quick: bool = True):
+    rows = []
+    archs = ["qwen3-4b", "qwen3-moe-235b-a22b", "mamba2-780m"] if quick else \
+        None
+    if archs is None:
+        from repro.configs import ASSIGNED_ARCHS
+        archs = list(ASSIGNED_ARCHS)
+    for arch in archs:
+        cfg = get_config(arch)
+        bundle = get_bundle(arch)
+        for shape_name, shape in SHAPES.items():
+            ok, _ = bundle.supports(shape)
+            if not ok:
+                continue
+            costs = analytic.cell_costs(cfg, shape, 256)
+            terms = {
+                "c": costs.flops_per_chip / PEAK_FLOPS,
+                "m": costs.hbm_bytes_per_chip / HBM_BW,
+                "x": costs.coll_bytes_per_chip / ICI_BW,
+            }
+            bound = max(terms, key=terms.get)
+            step = max(terms.values())
+            rows.append({
+                "name": f"roofline_{arch}_{shape_name}",
+                "us": step * 1e6,
+                "derived": (f"bound={bound};c_ms={terms['c']*1e3:.2f};"
+                            f"m_ms={terms['m']*1e3:.2f};"
+                            f"x_ms={terms['x']*1e3:.2f}"),
+            })
+    return rows

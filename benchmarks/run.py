@@ -1,0 +1,61 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6,fig9]
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default is the quick profile
+(CPU-scaled dataset sizes, same generative models and worker ratios as the
+paper's experiments; see repro/configs/paper.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "fig1_stragglers",
+    "fig6_logistic_synthetic",
+    "fig7_epsilon",
+    "fig8_small_datasets",
+    "fig9_softmax",
+    "fig10_coded_vs_spec",
+    "fig11_first_order",
+    "fig12_serverful",
+    "kernels_bench",
+    "roofline",
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger problem sizes (slower)")
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated module prefixes")
+    args = ap.parse_args(argv)
+
+    mods = MODULES
+    if args.only:
+        keys = args.only.split(",")
+        mods = [m for m in MODULES if any(m.startswith(k) for k in keys)]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in mods:
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=not args.full)
+        except Exception as e:   # noqa: BLE001 — surface and continue
+            print(f"{mod_name},NaN,ERROR:{type(e).__name__}:{e}",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us']:.1f},{r['derived']}")
+        print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

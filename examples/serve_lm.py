@@ -1,0 +1,23 @@
+"""Serving example: batched prefill+decode with continuous-batching waves.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.launch.serve import BatchedServer
+from repro.models.registry import ModelBundle
+
+cfg = smoke_config("qwen3-4b")
+bundle = ModelBundle(cfg)
+params = bundle.init(jax.random.PRNGKey(0))
+
+rs = np.random.RandomState(0)
+prompts = [rs.randint(1, cfg.vocab_size - 1, rs.randint(4, 16))
+           for _ in range(10)]
+
+server = BatchedServer(bundle, params, batch=4, max_seq=128)
+outs = server.generate(prompts, max_new=12)
+for i, (p, o) in enumerate(zip(prompts, outs)):
+    print(f"req{i}: prompt_len={len(p)} -> {o}")

@@ -1,0 +1,41 @@
+"""End-to-end training driver: train a reduced qwen3-family LM for a few
+hundred steps with the production code path — pjit train step, AdamW,
+deterministic data pipeline, async checkpointing, and a mid-run simulated
+chip failure with automatic restart.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import tempfile
+
+from repro.launch.mesh import make_host_mesh
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", type=str, default="qwen3-4b")
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+
+    ckpt_dir = tempfile.mkdtemp(prefix="repro-lm-")
+    cfg = TrainerConfig(
+        arch=args.arch, smoke=True, steps=args.steps, batch=8, seq=128,
+        lr=1e-3, warmup_steps=20, ckpt_dir=ckpt_dir, ckpt_every=50)
+    trainer = Trainer(cfg, make_host_mesh())
+    print(f"arch={args.arch} (reduced) params={trainer.bundle.param_count():,}"
+          f" ckpt={ckpt_dir}")
+
+    fail_at = args.fail_at if args.fail_at is not None else args.steps // 2
+    hist = trainer.run_with_restarts(fail_at=fail_at)
+    for rec in hist[:: max(1, len(hist) // 20)]:
+        print(f"step {rec['step']:5d}  loss {rec['loss']:.4f}  "
+              f"gnorm {rec['grad_norm']:.3f}")
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(from {hist[0]['loss']:.4f}; survived a simulated failure at "
+          f"step {fail_at})")
+
+
+if __name__ == "__main__":
+    main()

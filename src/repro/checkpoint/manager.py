@@ -1,0 +1,153 @@
+"""Checkpoint/restart substrate.
+
+Pytree state -> one .npy per leaf + a JSON manifest (tree structure, shapes,
+dtypes, step).  Writes go to a temp directory and are atomically renamed, so
+a worker dying mid-save never corrupts the latest checkpoint — the property
+the fault-tolerance tests rely on.  Saves can run on a background thread
+(async_save) so the train loop isn't blocked; restore places leaves onto the
+given shardings (reshard-on-restore = elastic rescale support).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+Pytree = Any
+
+# numpy can't natively serialize bf16/f8; store a bit-compatible view and
+# record the logical dtype in the manifest.
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _to_savable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _VIEW_AS:
+        return arr.view(_VIEW_AS[name]), name
+    return arr, name
+
+
+def _from_saved(arr: np.ndarray, logical: str) -> np.ndarray:
+    if logical in _VIEW_AS:
+        return arr.view(getattr(ml_dtypes, logical))
+    return arr
+
+
+def _flatten_with_names(tree: Pytree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- saving --
+    def save(self, step: int, state: Pytree) -> str:
+        names, leaves, _ = _flatten_with_names(state)
+        host_leaves = [np.asarray(l) for l in leaves]
+        tmp = os.path.join(self.directory, f".tmp-{step}")
+        final = os.path.join(self.directory, f"step-{step:08d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": []}
+        for i, (name, arr) in enumerate(zip(names, host_leaves)):
+            fname = f"leaf-{i:05d}.npy"
+            savable, logical = _to_savable(arr)
+            np.save(os.path.join(tmp, fname), savable)
+            manifest["leaves"].append({
+                "name": name, "file": fname,
+                "shape": list(arr.shape), "dtype": logical})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)            # atomic publish
+        self._gc()
+        return final
+
+    def async_save(self, step: int, state: Pytree) -> None:
+        """Snapshot to host memory synchronously, write on a thread."""
+        self.wait()
+        names, leaves, _ = _flatten_with_names(state)
+        host = [np.asarray(l) for l in leaves]   # device->host now
+        snap = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(state), host)
+        self._thread = threading.Thread(target=self.save, args=(step, snap))
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step-{s:08d}"),
+                          ignore_errors=True)
+
+    # ----------------------------------------------------------- restoring --
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step-"):
+                out.append(int(d.split("-")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Pytree,
+                shardings: Optional[Pytree] = None) -> Pytree:
+        """Load ``step`` shaped like ``like``; placed onto ``shardings`` if
+        given (which may correspond to a *different* mesh than at save time —
+        elastic restore)."""
+        path = os.path.join(self.directory, f"step-{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        names, like_leaves, treedef = _flatten_with_names(like)
+        assert len(names) == len(manifest["leaves"]), \
+            f"checkpoint has {len(manifest['leaves'])} leaves, " \
+            f"state needs {len(names)}"
+        by_name = {l["name"]: l for l in manifest["leaves"]}
+        out = []
+        shard_leaves = (jax.tree.leaves(shardings)
+                        if shardings is not None else [None] * len(names))
+        for name, like_leaf, shard in zip(names, like_leaves, shard_leaves):
+            rec = by_name[name]
+            arr = _from_saved(np.load(os.path.join(path, rec["file"])),
+                              rec["dtype"])
+            expect = tuple(getattr(like_leaf, "shape", arr.shape))
+            assert tuple(arr.shape) == expect, \
+                f"{name}: ckpt {arr.shape} != state {expect}"
+            if shard is not None:
+                out.append(jax.device_put(arr, shard))
+            else:
+                out.append(jax.numpy.asarray(
+                    arr, dtype=getattr(like_leaf, "dtype", None)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_latest(self, like: Pytree,
+                       shardings: Optional[Pytree] = None
+                       ) -> Optional[Pytree]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return self.restore(step, like, shardings)

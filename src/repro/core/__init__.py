@@ -1,0 +1,11 @@
+"""OverSketched Newton core: sketching, coded computation, the Newton loop."""
+from repro.core.sketch import (OverSketchConfig, CountSketch,
+                               sample_countsketch, apply_sketch,
+                               sketched_gram, oversketched_gram)
+from repro.core.coded import (ProductCode, make_code, encode_2d, coded_matvec,
+                              peel_decode)
+from repro.core.straggler import StragglerModel, SimClock
+from repro.core.objectives import (Dataset, LogisticRegression,
+                                   SoftmaxRegression, RidgeRegression,
+                                   LinearProgramIPM, LassoDualIPM)
+from repro.core.newton import NewtonConfig, NewtonResult, oversketched_newton

@@ -1,0 +1,86 @@
+"""Distributed line search (paper Sec. 3.2).
+
+The master broadcasts the descent direction p_t; workers evaluate their local
+partial objective at every candidate step in S = {4^0, 4^-1, ..., 4^-5}; the
+master sums partials and picks the largest alpha satisfying the Armijo
+condition (Eq. 5), or — for the weakly-convex Newton-MR path — the gradient
+norm condition (Eq. 6).  One extra communication round per iteration.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CANDIDATES = tuple(4.0 ** (-i) for i in range(6))   # 1, 1/4, ..., 4^-5
+
+
+def armijo_select(f_trials: jax.Array, f0: jax.Array, gtp: jax.Array,
+                  candidates: jax.Array, beta: float = 0.1) -> jax.Array:
+    """Largest alpha in the candidate set with
+    f(w + a p) <= f(w) + a * beta * p.g   (Eq. 5).  Falls back to the
+    smallest candidate if none qualifies (gtp < 0 ensures progress)."""
+    ok = f_trials <= f0 + candidates * beta * gtp
+    ok = ok & jnp.isfinite(f_trials)
+    # candidates are sorted descending; pick the first qualifying one.
+    idx = jnp.argmax(ok)
+    any_ok = ok.any()
+    return jnp.where(any_ok, candidates[idx], candidates[-1])
+
+
+def gradnorm_select(gnorm2_trials: jax.Array, gnorm2_0: jax.Array,
+                    ptHg: jax.Array, candidates: jax.Array,
+                    beta: float = 0.1) -> jax.Array:
+    """Largest alpha with ||g(w + a p)||^2 <= ||g||^2 + 2 a beta p^T H_hat g
+    (Eq. 6, weakly-convex Newton-MR line search)."""
+    ok = gnorm2_trials <= gnorm2_0 + 2.0 * candidates * beta * ptHg
+    ok = ok & jnp.isfinite(gnorm2_trials)
+    idx = jnp.argmax(ok)
+    any_ok = ok.any()
+    return jnp.where(any_ok, candidates[idx], candidates[-1])
+
+
+def linesearch_strongly_convex(objective, data, w: jax.Array, p: jax.Array,
+                               g: jax.Array, beta: float = 0.1,
+                               candidates: Tuple[float, ...] = DEFAULT_CANDIDATES
+                               ) -> jax.Array:
+    cand = jnp.asarray(candidates)
+    f0 = objective.value(w, data)
+    f_trials = jax.vmap(lambda a: objective.value(w + a * p, data))(cand)
+    return armijo_select(f_trials, f0, p @ g, cand, beta)
+
+
+def linesearch_weakly_convex(objective, data, w: jax.Array, p: jax.Array,
+                             g: jax.Array, h_hat_g: jax.Array,
+                             beta: float = 0.1,
+                             candidates: Tuple[float, ...] = DEFAULT_CANDIDATES
+                             ) -> jax.Array:
+    """Workers compute grad f_i at trial points; master uses ||grad f||^2
+    (paper footnote 4) and the sketched Hessian in the Armijo RHS."""
+    cand = jnp.asarray(candidates)
+    g0 = g @ g
+    def gn2(a):
+        gt = objective.gradient(w + a * p, data)
+        return gt @ gt
+    gnorm2_trials = jax.vmap(gn2)(cand)
+    return gradnorm_select(gnorm2_trials, g0, p @ h_hat_g, cand, beta)
+
+
+def distributed_f_trials(objective, data_local, w: jax.Array, p: jax.Array,
+                         candidates: jax.Array, axis: str) -> jax.Array:
+    """Inside shard_map: per-shard partial objective values at trial points,
+    psum-reduced over ``axis``.  The objective must decompose as a mean over
+    samples plus a (replicated) regularizer; we weight partials by shard size
+    and divide by the global count after the reduction."""
+    n_local = data_local.x.shape[0]
+
+    def f_partial(a):
+        # Unregularized partial sum; regularizer is added by the caller.
+        wa = w + a * p
+        return objective.value(wa, data_local) * n_local
+
+    trials = jax.vmap(f_partial)(candidates)
+    total = jax.lax.psum(trials, axis)
+    n = jax.lax.psum(jnp.asarray(n_local, jnp.float32), axis)
+    return total / n

@@ -1,0 +1,346 @@
+"""OverSketched Newton (paper Alg. 3 / Alg. 4): the master loop.
+
+Master-side Python loop (the paper's T is in the tens) dispatching jitted
+distributed phases:
+
+  1. gradient  — exact, straggler-resilient via the 2-D product code (Alg. 1)
+  2. Hessian   — approximate, straggler-resilient via OverSketch (Alg. 2)
+  3. direction — Cholesky/CG (strongly convex) or pinv/MINRES (weakly convex)
+  4. step size — distributed Armijo (Eq. 5) / grad-norm (Eq. 6) line search
+
+Each distributed phase is scored by the straggler simulation clock
+(`core.straggler`), which is how the paper's wall-clock comparisons are
+reproduced on a single-device container.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from functools import partial
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import numpy as np
+
+from repro.core import coded, linesearch, sketch, solvers, straggler
+from repro.core.objectives import Dataset
+
+
+def _decodable(erased_grid: "np.ndarray") -> bool:
+    """Host-side peeling feasibility check on the (g+1)x(g+1) erasure grid.
+    Mirrors coded.peel_decode: a line with exactly one missing cell can be
+    recovered; iterate to fixpoint."""
+    known = ~erased_grid.copy()
+    g1 = known.shape[0]
+    for _ in range(2 * g1):
+        if known.all():
+            return True
+        progress = False
+        for axis in (0, 1):
+            missing = (~known).sum(axis=axis)
+            for i in np.where(missing == 1)[0]:
+                if axis == 0:
+                    j = int(np.argmin(known[:, i]))
+                    known[j, i] = True
+                else:
+                    j = int(np.argmin(known[i, :]))
+                    known[i, j] = True
+                progress = True
+        if not progress:
+            return False
+    return bool(known.all())
+
+
+@dataclasses.dataclass(frozen=True)
+class NewtonConfig:
+    iters: int = 20
+    sketch: sketch.OverSketchConfig = dataclasses.field(
+        default_factory=lambda: sketch.OverSketchConfig(
+            sketch_dim=2048, block_size=256, straggler_tolerance=0.25))
+    beta: float = 0.1
+    candidates: tuple = linesearch.DEFAULT_CANDIDATES
+    unit_step: bool = False
+    solver: str = "auto"            # auto | chol | cg | pinv | minres
+    cg_iters: int = 64
+    gradient_policy: str = "coded"  # coded | wait_all | ignore | speculative
+    hessian_policy: str = "oversketch"   # oversketch | exact | exact_speculative
+    coded_block_rows: int = 256
+    seed: int = 0
+    use_kernels: bool = False       # route sketch through repro.kernels ops
+    track_test_error: bool = False
+    # Paper Thm 3.2 remark: "the sketch dimension can be increased to reduce
+    # eps ... and improve the convergence rate in practice" — when iteration
+    # progress stalls (the eps-linear tail), double the sketch dimension.
+    adaptive_sketch: bool = False
+    adaptive_stall_ratio: float = 0.25   # f-decrease ratio that counts as a stall
+    adaptive_max_growth: int = 4         # cap: sketch_dim <= 4x initial
+
+
+@dataclasses.dataclass
+class NewtonResult:
+    w: jax.Array
+    history: Dict[str, List[float]]
+
+
+class CodedMatvecEngine:
+    """Holds the one-time 2-D product-code encodings of X and X^T (the paper
+    amortizes encoding across iterations, Sec. 4.1) and serves straggler-
+    resilient matvecs."""
+
+    def __init__(self, data: Dataset, block_rows: int,
+                 model: Optional[straggler.StragglerModel]):
+        self.model = model
+        n, d = data.x.shape
+        br_n = max(1, min(block_rows, n))
+        br_d = max(1, min(block_rows, d))
+        self.code_x = coded.make_code(n, br_n)      # for X @ v    (n rows)
+        self.code_xt = coded.make_code(d, br_d)     # for X^T @ v  (d rows)
+        self.enc_x = coded.encode_2d(data.x, self.code_x)
+        self.enc_xt = coded.encode_2d(data.x.T, self.code_xt)
+        self.out_rows = {"X": n, "XT": d}
+        self.fallbacks = 0
+
+        @partial(jax.jit, static_argnames=("tag",))
+        def _mv(tag, v, erased):
+            enc = self.enc_x if tag == "X" else self.enc_xt
+            code = self.code_x if tag == "X" else self.code_xt
+            return coded.coded_matvec(enc, v, code, self.out_rows[tag], erased)
+
+        self._mv = _mv
+
+    def code_for(self, tag: str) -> coded.ProductCode:
+        return self.code_x if tag == "X" else self.code_xt
+
+    def matvec(self, tag: str, v: jax.Array, clock: straggler.SimClock,
+               key: jax.Array, policy: str) -> jax.Array:
+        code = self.code_for(tag)
+        w = code.num_workers
+        enc = self.enc_x if tag == "X" else self.enc_xt
+        flops = 2.0 * code.block_rows * enc.shape[-1]   # one block matvec
+        erased = None
+        if self.model is not None and policy == "coded":
+            # Faithful master: results stream in; decode starts as soon as
+            # the arrived set is peelable (paper Alg. 1 step 8).
+            times = np.asarray(self.model.sample_times(
+                key, w, flops_per_worker=flops))
+            order = np.argsort(times)
+            g1 = code.grid + 1
+            k_min = max(1, w - (2 * code.grid + 1))
+            elapsed = times[order[-1]]
+            chosen = w
+            for k in range(k_min, w + 1):
+                mask = np.zeros(w, bool)
+                mask[order[:k]] = True
+                if _decodable(mask.reshape(g1, g1)):
+                    elapsed = times[order[k - 1]]
+                    chosen = k
+                    break
+            mask = np.zeros(w, bool)
+            mask[order[:chosen]] = True
+            clock.charge(float(elapsed) +
+                         self.model.comm_per_unit * 1.0)
+            erased = jnp.asarray(~mask).reshape(g1, g1)
+        elif self.model is not None and policy == "wait_all":
+            clock.phase(key, w, policy="wait_all", flops_per_worker=flops,
+                        comm_units=1.0)
+        elif self.model is not None and policy == "speculative":
+            clock.phase(key, w, policy="speculative",
+                        flops_per_worker=flops, comm_units=1.0)
+        elif self.model is not None and policy == "ignore":
+            # mini-batch style: drop stragglers' contributions entirely —
+            # handled by the caller using an uncoded gradient; we still pay
+            # the k-of-n time.
+            k = max(1, int(0.95 * w))
+            clock.phase(key, w, policy="k_of_n", k=k,
+                        flops_per_worker=flops, comm_units=1.0)
+        y, ok = self._mv(tag, v, erased)
+        if erased is not None and not bool(ok):
+            # Decode failure (erasure pattern beyond the code): the paper's
+            # master re-launches stragglers; charge a full re-execution round.
+            self.fallbacks += 1
+            y, _ = self._mv(tag, v, None)
+            if self.model is not None:
+                clock.phase(jax.random.fold_in(key, 1), w,
+                            policy="wait_all", comm_units=1.0)
+        return y
+
+
+def _solve_direction(objective, h_hat: jax.Array, g: jax.Array,
+                     cfg: NewtonConfig) -> jax.Array:
+    solver = cfg.solver
+    if solver == "auto":
+        solver = "chol" if objective.strongly_convex else "pinv"
+    if solver == "chol":
+        return -solvers.psd_solve(h_hat, g)
+    if solver == "cg":
+        return -solvers.conjugate_gradient(lambda v: h_hat @ v, g,
+                                           jnp.zeros_like(g), cfg.cg_iters)
+    if solver == "pinv":
+        return -solvers.psd_pinv_solve(h_hat, g)
+    if solver == "minres":
+        return -solvers.minres(lambda v: h_hat @ v, g, cfg.cg_iters)
+    raise ValueError(solver)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_sketched_hessian(objective, block_size: int, use_kernels: bool):
+    """Hashable frozen-dataclass objectives => cacheable jitted closures."""
+    def fn(w, data, h, sigma, survivors):
+        a = objective.hess_sqrt(w, data)
+        d = a.shape[1]
+        reg = objective.hess_reg * jnp.eye(d, dtype=a.dtype)
+        if use_kernels:
+            from repro.kernels import ops as kops
+            a_t = kops.count_sketch_apply(h, sigma, a, block_size)
+            return kops.oversketch_gram(a_t, survivors) + reg
+        cs = sketch.CountSketch(h=h, sigma=sigma, block_size=block_size)
+        a_t = sketch.apply_sketch(cs, a)
+        return sketch.sketched_gram(a_t, survivors) + reg
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_exact_hessian(objective):
+    def fn(w, data):
+        a = objective.hess_sqrt(w, data)
+        d = a.shape[1]
+        return a.T @ a + objective.hess_reg * jnp.eye(d, dtype=a.dtype)
+    return jax.jit(fn)
+
+
+def _hess_rows(objective, data: Dataset, w: jax.Array) -> Tuple[int, int]:
+    shape = jax.eval_shape(objective.hess_sqrt, w, data).shape
+    return shape[0], shape[1]
+
+
+def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
+                   key: jax.Array, clock: Optional[straggler.SimClock]
+                   ) -> jax.Array:
+    """Returns H_hat (approximate or exact) including the hess_reg * I term.
+
+    Worker accounting follows the paper: OverSketch invokes (N+e)*(d/b)^2
+    workers (Alg. 2 step 3) vs ceil(n/b)*(d/b)^2 for the exact product —
+    same per-worker block work, vastly different worker counts and master
+    I/O when n >> m."""
+    n_rows, d = _hess_rows(objective, data, w)
+    b = max(cfg.sketch.block_size, 1)
+    d_blocks = max(1, -(-d // b))
+    block_flops = 2.0 * b * min(d, b) ** 2    # one (b x d_tile) gram block
+    if cfg.hessian_policy == "oversketch":
+        scfg = cfg.sketch
+        survivors = jnp.ones((scfg.total_blocks,), bool)
+        if clock is not None:
+            # Alg. 2 termination is per OUTPUT TILE: each of the (d/b)^2
+            # tiles waits for any N of its N+e sketch-block workers.  The
+            # tile groups run in parallel (phase time ~ one k-of-n round);
+            # the master I/O scales with the full worker count.
+            total_workers = scfg.total_blocks * d_blocks * d_blocks
+            _, mask = clock.phase(key, scfg.total_blocks, policy="k_of_n",
+                                  k=scfg.num_blocks,
+                                  flops_per_worker=block_flops,
+                                  comm_units=0.05 * total_workers)
+            survivors = mask
+        cs = sketch.sample_countsketch(jax.random.fold_in(key, 7),
+                                       n_rows, scfg)
+        fn = _jitted_sketched_hessian(objective, scfg.block_size,
+                                      cfg.use_kernels)
+        return fn(w, data, cs.h, cs.sigma, survivors)
+    # exact Hessian (paper's "exact Newton" baseline)
+    if clock is not None:
+        workers = max(1, -(-n_rows // b)) * d_blocks * d_blocks
+        policy = ("speculative" if cfg.hessian_policy == "exact_speculative"
+                  else "wait_all")
+        clock.phase(key, workers, policy=policy,
+                    flops_per_worker=block_flops,
+                    comm_units=0.05 * workers)
+    return _jitted_exact_hessian(objective)(w, data)
+
+
+def oversketched_newton(objective, data: Dataset, w0: jax.Array,
+                        cfg: NewtonConfig,
+                        model: Optional[straggler.StragglerModel] = straggler.StragglerModel()
+                        ) -> NewtonResult:
+    """Run OverSketched Newton; returns the iterate and a per-iteration log."""
+    key = jax.random.PRNGKey(cfg.seed)
+    clock = straggler.SimClock(model) if model is not None else None
+    engine = CodedMatvecEngine(data, cfg.coded_block_rows, model)
+
+    w = jnp.asarray(w0, jnp.float32)
+    hist: Dict[str, List[float]] = {k: [] for k in (
+        "iter", "fval", "gnorm", "step", "time", "test_error",
+        "sketch_dim")}
+
+    grad_fn = jax.jit(objective.gradient)
+    val_fn = jax.jit(objective.value)
+    live_cfg = cfg
+    prev_f = None
+    prev_decrease = None
+
+    for t in range(cfg.iters):
+        cfg = live_cfg
+        key, kg, kh, kl = jax.random.split(key, 4)
+
+        # --- 1. gradient (straggler-resilient coded matvecs, Alg. 1) -------
+        if cfg.gradient_policy == "exact" or model is None:
+            g = grad_fn(w, data)
+        else:
+            mv = lambda tag, v: engine.matvec(
+                tag, v, clock, jax.random.fold_in(kg, hash(tag) % 997),
+                cfg.gradient_policy)
+            g = objective.gradient_via(w, data, mv)
+
+        # --- 2. sketched Hessian (Alg. 2) ----------------------------------
+        h_hat = _hessian_phase(objective, data, w, cfg, kh, clock)
+
+        # --- 3. direction at the master ------------------------------------
+        p = _solve_direction(objective, h_hat, g, cfg)
+
+        # --- 4. distributed line search (Sec. 3.2) --------------------------
+        if cfg.unit_step:
+            step = jnp.asarray(1.0)
+        elif objective.strongly_convex:
+            step = linesearch.linesearch_strongly_convex(
+                objective, data, w, p, g, cfg.beta, cfg.candidates)
+        else:
+            step = linesearch.linesearch_weakly_convex(
+                objective, data, w, p, g, h_hat @ g, cfg.beta, cfg.candidates)
+        if clock is not None and not cfg.unit_step:
+            nb = max(1, data.x.shape[0] // max(cfg.coded_block_rows, 1))
+            ls_flops = 2.0 * cfg.coded_block_rows * data.x.shape[1] * \
+                len(cfg.candidates)
+            clock.phase(kl, nb, policy="wait_all",
+                        flops_per_worker=ls_flops, comm_units=0.5)
+
+        w = w + step * p
+
+        hist["iter"].append(t)
+        f_now = float(val_fn(w, data))
+        hist["fval"].append(f_now)
+        hist["gnorm"].append(float(jnp.linalg.norm(grad_fn(w, data))))
+        hist["step"].append(float(step))
+        hist["time"].append(clock.time if clock is not None else float(t + 1))
+        hist["sketch_dim"].append(live_cfg.sketch.sketch_dim)
+
+        # --- adaptive sketch growth (paper Thm 3.2 remark) ------------------
+        if cfg.adaptive_sketch and prev_f is not None and \
+                prev_decrease is not None and prev_decrease > 0:
+            decrease = prev_f - f_now
+            stalled = decrease < cfg.adaptive_stall_ratio * prev_decrease
+            grown = live_cfg.sketch.sketch_dim // cfg.sketch.sketch_dim
+            if stalled and grown < cfg.adaptive_max_growth:
+                new_sketch = dataclasses.replace(
+                    live_cfg.sketch,
+                    sketch_dim=live_cfg.sketch.sketch_dim * 2)
+                live_cfg = dataclasses.replace(live_cfg, sketch=new_sketch)
+        if prev_f is not None:
+            prev_decrease = prev_f - f_now
+        prev_f = f_now
+        if cfg.track_test_error and data.x_test is not None:
+            hist["test_error"].append(
+                float(objective.error(w, data.x_test, data.y_test)))
+        else:
+            hist["test_error"].append(float("nan"))
+
+    return NewtonResult(w=w, history=hist)

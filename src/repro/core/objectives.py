@@ -1,0 +1,286 @@
+"""Convex objectives with the (gradient-as-matvec, Hessian-square-root)
+structure that OverSketched Newton exploits (paper Sec. 4).
+
+Conventions (row-major, mean-normalized):
+  features X: (n, d) with samples as rows;  logistic labels y in {-1, +1}.
+  logistic:  f(w) = (1/n) sum log(1 + exp(-y_i x_i.w)) + (lam/2)||w||^2
+  softmax:   W (K, d) class-major, flat dim K*d, mean-normalized NLL,
+             unregularized => weakly convex (paper Sec. 4.2).
+  ridge:     f(w) = (1/2n)||Xw - y||^2 + (lam/2)||w||^2
+  lp_ipm:    f(x) = tau c.x - sum_i log(b_i - a_i.x)   (interior point stage)
+
+Every objective provides:
+  value(w, data), gradient(w, data)
+  hess_sqrt(w, data) -> A with  grad^2 f = A^T A + hess_reg * I
+  gradient_via(w, data, mv) -> gradient where every large matvec goes through
+     mv(tag, v): tag in {"X", "XT"} — the hook the coded/straggler-resilient
+     distributed path plugs into (paper Alg. 1 usage).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Dataset(NamedTuple):
+    x: jax.Array          # (n, d) features
+    y: jax.Array          # (n,) labels (+-1) or (n, K) one-hot
+    x_test: Optional[jax.Array] = None
+    y_test: Optional[jax.Array] = None
+
+
+MatVec = Callable[[str, jax.Array], jax.Array]
+
+
+def _plain_mv(data: Dataset) -> MatVec:
+    def mv(tag: str, v: jax.Array) -> jax.Array:
+        if tag == "X":
+            return data.x @ v
+        if tag == "XT":
+            return data.x.T @ v
+        raise ValueError(tag)
+    return mv
+
+
+@dataclasses.dataclass(frozen=True)
+class LogisticRegression:
+    lam: float = 1e-5
+    strongly_convex: bool = True
+    name: str = "logistic"
+
+    @property
+    def hess_reg(self) -> float:
+        return self.lam
+
+    def value(self, w: jax.Array, data: Dataset) -> jax.Array:
+        margins = data.y * (data.x @ w)
+        # log1p(exp(-m)) stable via softplus(-m)
+        return jnp.mean(jax.nn.softplus(-margins)) + 0.5 * self.lam * w @ w
+
+    def gradient_via(self, w: jax.Array, data: Dataset,
+                     mv: Optional[MatVec] = None) -> jax.Array:
+        mv = mv or _plain_mv(data)
+        n = data.x.shape[0]
+        alpha = mv("X", w)                                   # (n,)
+        beta = -data.y * jax.nn.sigmoid(-data.y * alpha)     # -y/(1+e^{y a})
+        return mv("XT", beta) / n + self.lam * w
+
+    def gradient(self, w: jax.Array, data: Dataset) -> jax.Array:
+        return self.gradient_via(w, data)
+
+    def hess_sqrt(self, w: jax.Array, data: Dataset) -> jax.Array:
+        """A = sqrt(Lam/n) X, Lam_ii = sig(y a)(1 - sig(y a))."""
+        n = data.x.shape[0]
+        alpha = data.x @ w
+        s = jax.nn.sigmoid(data.y * alpha)
+        lam_diag = s * (1.0 - s)
+        return jnp.sqrt(lam_diag / n)[:, None] * data.x
+
+    def masked_value(self, w: jax.Array, data: Dataset,
+                     row_ok: jax.Array) -> jax.Array:
+        """Mean loss over surviving rows only (ignore-stragglers scheme)."""
+        margins = data.y * (data.x @ w)
+        loss = jax.nn.softplus(-margins) * row_ok
+        return loss.sum() / jnp.maximum(row_ok.sum(), 1.0) \
+            + 0.5 * self.lam * w @ w
+
+    def error(self, w: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+        return jnp.mean(jnp.sign(x @ w) != y)
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxRegression:
+    """Unregularized multinomial logistic regression — weakly convex.
+
+    Parameters are a flat vector w of length K*d (class-major), matching the
+    paper's dK-dimensional Hessian treatment (Sec. 4.2).
+    """
+    num_classes: int
+    lam: float = 0.0
+    strongly_convex: bool = False
+    name: str = "softmax"
+
+    @property
+    def hess_reg(self) -> float:
+        return self.lam
+
+    def _unflatten(self, w: jax.Array, d: int) -> jax.Array:
+        return w.reshape(self.num_classes, d)
+
+    def value(self, w: jax.Array, data: Dataset) -> jax.Array:
+        d = data.x.shape[1]
+        logits = data.x @ self._unflatten(w, d).T            # (n, K)
+        nll = jax.nn.logsumexp(logits, axis=1) - (logits * data.y).sum(axis=1)
+        return jnp.mean(nll) + 0.5 * self.lam * w @ w
+
+    def gradient_via(self, w: jax.Array, data: Dataset,
+                     mv: Optional[MatVec] = None) -> jax.Array:
+        mv = mv or _plain_mv(data)
+        n, d = data.x.shape
+        # alpha: (n, K) via K matvecs through the hook (paper computes X^T W).
+        wk = self._unflatten(w, d)
+        alpha = jnp.stack([mv("X", wk[k]) for k in range(self.num_classes)],
+                          axis=1)
+        p = jax.nn.softmax(alpha, axis=1)
+        beta = (p - data.y) / n                              # (n, K)
+        g = jnp.stack([mv("XT", beta[:, k]) for k in range(self.num_classes)],
+                      axis=0)
+        return g.reshape(-1) + self.lam * w
+
+    def gradient(self, w: jax.Array, data: Dataset) -> jax.Array:
+        d = data.x.shape[1]
+        logits = data.x @ self._unflatten(w, d).T
+        p = jax.nn.softmax(logits, axis=1)
+        g = (p - data.y).T @ data.x / data.x.shape[0]        # (K, d)
+        return g.reshape(-1) + self.lam * w
+
+    def hess_sqrt(self, w: jax.Array, data: Dataset) -> jax.Array:
+        """A (n*K, d*K) with A^T A = Hessian (class-major blocks).
+
+        Per-sample PSD factor: B_n = diag(p_n) - p_n p_n^T = M_n M_n^T with
+        M_n = diag(sqrt(p_n)) - p_n sqrt(p_n)^T  (verified in tests).
+        """
+        n, d = data.x.shape
+        k = self.num_classes
+        logits = data.x @ self._unflatten(w, d).T
+        p = jax.nn.softmax(logits, axis=1)                   # (n, K)
+        sq = jnp.sqrt(p)
+        m = (jnp.eye(k)[None] * sq[:, None, :]) - p[..., None] * sq[:, None, :]
+        # rows (n, c): A[(n,c), (i, j)] = M_n[i, c] * x_n[j] / sqrt(n)
+        a = jnp.einsum("nic,nj->ncij", m, data.x) / jnp.sqrt(n)
+        return a.reshape(n * k, k * d)
+
+    def masked_value(self, w: jax.Array, data: Dataset,
+                     row_ok: jax.Array) -> jax.Array:
+        d = data.x.shape[1]
+        logits = data.x @ self._unflatten(w, d).T
+        nll = jax.nn.logsumexp(logits, axis=1) - (logits * data.y).sum(axis=1)
+        return (nll * row_ok).sum() / jnp.maximum(row_ok.sum(), 1.0) \
+            + 0.5 * self.lam * w @ w
+
+    def error(self, w: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+        d = x.shape[1]
+        pred = jnp.argmax(x @ self._unflatten(w, d).T, axis=1)
+        return jnp.mean(pred != jnp.argmax(y, axis=1))
+
+
+@dataclasses.dataclass(frozen=True)
+class RidgeRegression:
+    lam: float = 1e-5
+    strongly_convex: bool = True
+    name: str = "ridge"
+
+    @property
+    def hess_reg(self) -> float:
+        return self.lam
+
+    def value(self, w: jax.Array, data: Dataset) -> jax.Array:
+        r = data.x @ w - data.y
+        return 0.5 * jnp.mean(r * r) + 0.5 * self.lam * w @ w
+
+    def gradient_via(self, w: jax.Array, data: Dataset,
+                     mv: Optional[MatVec] = None) -> jax.Array:
+        mv = mv or _plain_mv(data)
+        n = data.x.shape[0]
+        beta = mv("X", w) - data.y
+        return mv("XT", beta) / n + self.lam * w
+
+    def gradient(self, w: jax.Array, data: Dataset) -> jax.Array:
+        return self.gradient_via(w, data)
+
+    def hess_sqrt(self, w: jax.Array, data: Dataset) -> jax.Array:
+        return data.x / jnp.sqrt(data.x.shape[0])
+
+    def masked_value(self, w: jax.Array, data: Dataset,
+                     row_ok: jax.Array) -> jax.Array:
+        r = data.x @ w - data.y
+        return 0.5 * (r * r * row_ok).sum() / jnp.maximum(row_ok.sum(), 1.0) \
+            + 0.5 * self.lam * w @ w
+
+    def error(self, w: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+        r = x @ w - y
+        return jnp.mean(r * r)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearProgramIPM:
+    """One interior-point stage of  min c.x  s.t.  Ax <= b  (paper Sec. 4.3).
+
+    data.x = A (n, m), data.y = b (n,); c and tau are parameters here.
+    Strongly convex on the interior when A has full column rank.
+    """
+    c: jax.Array
+    tau: float = 10.0
+    strongly_convex: bool = True
+    name: str = "lp_ipm"
+
+    @property
+    def hess_reg(self) -> float:
+        return 0.0
+
+    def value(self, w: jax.Array, data: Dataset) -> jax.Array:
+        slack = data.y - data.x @ w
+        barrier = jnp.where(slack > 0, jnp.log(jnp.maximum(slack, 1e-30)),
+                            -jnp.inf)
+        return self.tau * self.c @ w - barrier.sum()
+
+    def gradient_via(self, w: jax.Array, data: Dataset,
+                     mv: Optional[MatVec] = None) -> jax.Array:
+        mv = mv or _plain_mv(data)
+        alpha = mv("X", w)
+        beta = 1.0 / (data.y - alpha)
+        return self.tau * self.c + mv("XT", beta)
+
+    def gradient(self, w: jax.Array, data: Dataset) -> jax.Array:
+        return self.gradient_via(w, data)
+
+    def hess_sqrt(self, w: jax.Array, data: Dataset) -> jax.Array:
+        slack = data.y - data.x @ w
+        return data.x / jnp.abs(slack)[:, None]
+
+
+@dataclasses.dataclass(frozen=True)
+class LassoDualIPM:
+    """Interior-point stage of the Lasso dual (paper Sec. 4.3):
+    min_z tau/2 ||y - z||^2 - sum_j log(lam - x_j.z) - sum_j log(lam + x_j.z).
+
+    data.x: (n, d) measurement matrix (columns x_j are the dual constraints);
+    data.y: (n,) measurements; optimizes over z in R^n.
+    """
+    lam: float = 1.0
+    tau: float = 10.0
+    strongly_convex: bool = True
+    name: str = "lasso_dual_ipm"
+
+    @property
+    def hess_reg(self) -> float:
+        return self.tau
+
+    def value(self, z: jax.Array, data: Dataset) -> jax.Array:
+        alpha = data.x.T @ z                                 # (d,)
+        lo, hi = self.lam - alpha, self.lam + alpha
+        ok = (lo > 0) & (hi > 0)
+        bar = jnp.where(ok, jnp.log(jnp.maximum(lo, 1e-30))
+                        + jnp.log(jnp.maximum(hi, 1e-30)), -jnp.inf)
+        r = data.y - z
+        return 0.5 * self.tau * r @ r - bar.sum()
+
+    def gradient_via(self, z: jax.Array, data: Dataset,
+                     mv: Optional[MatVec] = None) -> jax.Array:
+        mv = mv or _plain_mv(data)
+        alpha = mv("XT", z)
+        beta = 1.0 / (self.lam - alpha)
+        gamma = 1.0 / (self.lam + alpha)
+        return self.tau * (z - data.y) + mv("X", beta - gamma)
+
+    def gradient(self, z: jax.Array, data: Dataset) -> jax.Array:
+        return self.gradient_via(z, data)
+
+    def hess_sqrt(self, z: jax.Array, data: Dataset) -> jax.Array:
+        """grad^2 f = tau I + X Lam X^T; A = sqrt(Lam) X^T  ((d, n))."""
+        alpha = data.x.T @ z
+        lam_diag = 1.0 / (self.lam - alpha) ** 2 + 1.0 / (self.lam + alpha) ** 2
+        return jnp.sqrt(lam_diag)[:, None] * data.x.T

@@ -1,0 +1,108 @@
+"""Linear solvers for the Newton direction.
+
+Strongly convex: Cholesky (small d at the master, paper Alg. 4 step 16) or CG
+(paper footnote 6).  Weakly convex: eigendecomposition pseudo-inverse or MINRES
+(paper Sec. 4.2 — "minimum-residual method").  All are jit-compatible.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def psd_solve(h: jax.Array, g: jax.Array, jitter: float = 1e-9) -> jax.Array:
+    """Solve H p = g for symmetric PD H via Cholesky with a tiny jitter."""
+    d = h.shape[0]
+    chol = jnp.linalg.cholesky(h + jitter * jnp.eye(d, dtype=h.dtype))
+    return jax.scipy.linalg.cho_solve((chol, True), g)
+
+
+def psd_pinv_solve(h: jax.Array, g: jax.Array,
+                   rtol: float = 1e-6) -> jax.Array:
+    """Moore-Penrose solve H^+ g via symmetric eigendecomposition.
+
+    Used for the weakly-convex Newton-MR update p = -H^+ grad (paper Eq. 3)
+    when d is small enough to factorize at the master.
+    """
+    evals, evecs = jnp.linalg.eigh(h)
+    cutoff = rtol * jnp.max(jnp.abs(evals))
+    inv = jnp.where(jnp.abs(evals) > cutoff, 1.0 / evals, 0.0)
+    return evecs @ (inv * (evecs.T @ g))
+
+
+def conjugate_gradient(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,
+                       x0: jax.Array, iters: int = 50,
+                       tol: float = 1e-10) -> jax.Array:
+    """Plain CG for PD systems (matvec-only access)."""
+    def body(carry, _):
+        x, r, p, rs = carry
+        hp = matvec(p)
+        denom = p @ hp
+        alpha = jnp.where(denom > 0, rs / jnp.maximum(denom, 1e-30), 0.0)
+        x = x + alpha * p
+        r = r - alpha * hp
+        rs_new = r @ r
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        live = (rs_new > tol).astype(b.dtype)
+        p = live * (r + beta * p)
+        return (x, r, p, rs_new), None
+
+    r0 = b - matvec(x0)
+    (x, _, _, _), _ = jax.lax.scan(body, (x0, r0, r0, r0 @ r0), None,
+                                   length=iters)
+    return x
+
+
+def minres(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,
+           iters: int = 50) -> jax.Array:
+    """MINRES via an explicit re-orthogonalized Lanczos basis.
+
+    Builds V ((iters+1), d) and the tridiagonal T ((iters+1), iters), solves
+    the small least-squares min ||T y - beta1 e1||, returns V[:iters]^T y.
+    Converges to the minimum-residual solution; for a consistent PSD system
+    this matches H^+ b on range(H) — exactly the Newton-MR direction the
+    paper needs for weakly-convex objectives.  O(iters * d) memory, which is
+    fine for master-side solves, and bit-stable under jit.
+    """
+    d = b.shape[0]
+    iters = min(iters, d)           # Krylov space cannot exceed dim(b)
+    beta1 = jnp.linalg.norm(b)
+    v1 = b / jnp.maximum(beta1, 1e-30)
+
+    def body(carry, i):
+        vs, alphas, betas, live = carry
+        v_i = vs[i]
+        hv = matvec(v_i)
+        alpha = v_i @ hv
+        hv = hv - alpha * v_i - betas[i] * vs[i - 1]
+        # Full re-orthogonalization against the basis built so far.
+        mask = (jnp.arange(iters + 1) <= i)[:, None].astype(b.dtype)
+        proj = (vs * mask) @ hv
+        hv = hv - (vs * mask).T @ proj
+        beta = jnp.linalg.norm(hv)
+        # Lanczos breakdown: the Krylov space is exhausted; zero everything
+        # from here on so T stays well-posed for the small least-squares.
+        live_next = live & (beta > 1e-6 * beta1)
+        lf = live.astype(b.dtype)
+        v_next = lf * live_next.astype(b.dtype) * hv / jnp.maximum(beta, 1e-30)
+        vs = vs.at[i + 1].set(v_next)
+        alphas = alphas.at[i].set(lf * alpha)
+        betas = betas.at[i + 1].set(lf * live_next.astype(b.dtype) * beta)
+        return (vs, alphas, betas, live_next), None
+
+    vs0 = jnp.zeros((iters + 1, d), b.dtype).at[0].set(v1)
+    (vs, alphas, betas, _), _ = jax.lax.scan(
+        body, (vs0, jnp.zeros(iters, b.dtype), jnp.zeros(iters + 1, b.dtype),
+               jnp.asarray(True)),
+        jnp.arange(iters))
+
+    idx = jnp.arange(iters)
+    t = jnp.zeros((iters + 1, iters), b.dtype)
+    t = t.at[idx, idx].set(alphas)
+    t = t.at[idx + 1, idx].set(betas[1:iters + 1])
+    t = t.at[idx[:-1], idx[1:]].set(betas[1:iters])
+    rhs = jnp.zeros(iters + 1, b.dtype).at[0].set(beta1)
+    y, *_ = jnp.linalg.lstsq(t, rhs, rcond=1e-6)
+    return vs[:iters].T @ y

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (make_logistic_dataset, make_softmax_dataset,
+                                  profile_dataset)
+from repro.data.pipeline import TokenPipeline

@@ -1,0 +1,6 @@
+"""Distribution substrate: sharding policy + resilient collectives."""
+from repro.distributed.sharding import (activation_constraint, batch_axes,
+                                        batch_shardings, cache_shardings,
+                                        opt_state_shardings, param_shardings,
+                                        resolve_pspec)
+from repro.distributed.collectives import resilient_psum

@@ -1,0 +1,239 @@
+"""Sharding policy: logical parameter/activation axes -> mesh axes.
+
+Baseline layout (recorded in EXPERIMENTS.md as the §Perf starting point):
+  params:  TP on "model" (heads / ffn / experts / vocab / rnn) + FSDP on
+           "data" (embed);  replicated across "pod" (per-pod parameter copy,
+           gradient all-reduce over pods).
+  train activations: batch over ("pod","data"), sequence over "model"
+           (sequence parallelism between layers — the attention/MLP internals
+           re-gather what they need).
+  decode caches: batch over ("pod","data") when divisible; kv_heads over
+           "model" when divisible, else cache seq over "model";
+           long-context (batch=1): cache seq over ("data","model").
+
+Rules are applied with divisibility checks and the PartitionSpec constraint
+that a mesh axis appears at most once per spec.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+# logical axis -> candidate mesh axes (first that divides wins).
+#
+# Design note (EXPERIMENTS.md §Perf iteration 1): params sharded over "data"
+# (FSDP) are loop-invariant inputs to the layer scan, and GSPMD hoists their
+# all-gather OUT of the loop — the full stacked weights materialize per chip.
+# So the parameter layout is pure 2-D tensor parallelism instead: every large
+# matmul dim that the computation can consume *sharded* (heads/ffn/vocab/
+# experts/rnn on "model"; the per-expert ffn dim additionally on "data" —
+# expert einsums keep it sharded end-to-end).  Optimizer state gets ZeRO-1
+# sharding over "data" (it lives outside the scan, so its gathers are not
+# hoistable into oblivion).
+PARAM_RULES: Dict[Optional[str], Tuple[str, ...]] = {
+    "embed": (),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    # Fallback TP axis: when num_heads is not divisible by the model axis
+    # (llava 56, qwen2 28, whisper 20 on a 16-wide axis) the head_dim
+    # (128/256/64 — always divisible) carries the sharding so QKV/O weights
+    # never replicate (§Perf iteration: -12.4 GB/chip on llava train).
+    "head_dim": ("model",),
+    "ffn": ("model",),
+    "expert_ffn": ("data",),
+    "experts": ("model",),
+    "rnn": ("model",),
+    "layers": (),
+    "conv": (),
+    "state": (),
+    "classes": (),
+    None: (),
+}
+
+
+def _mesh_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis] if axis in mesh.shape else 0
+
+
+def resolve_pspec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                  mesh: Mesh,
+                  rules: Dict[Optional[str], Tuple[str, ...]] = PARAM_RULES
+                  ) -> P:
+    """Logical axes -> PartitionSpec, honouring divisibility and the
+    one-mesh-axis-per-spec constraint (first dim that claims an axis keeps
+    it; later dims fall back to replication)."""
+    used = set()
+    entries = []
+    for dim, logical in zip(shape, axes):
+        choice = None
+        for cand in rules.get(logical, ()):  # first candidate that fits
+            size = _mesh_size(mesh, cand)
+            if size and dim % size == 0 and cand not in used:
+                choice = cand
+                used.add(cand)
+                break
+        entries.append(choice)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(bundle, mesh: Mesh) -> Pytree:
+    """NamedSharding tree aligned with the bundle's param tree."""
+    from repro.models.common import Spec
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_pspec(s.shape, s.axes, mesh)),
+        bundle.specs(), is_leaf=lambda x: isinstance(x, Spec))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes the global batch shards over (pod major)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _batch_spec(mesh: Mesh, batch: int):
+    axes = batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return axes if axes and batch % total == 0 else None
+
+
+def batch_shardings(bundle, mesh: Mesh, input_specs: Dict[str, Any]
+                    ) -> Dict[str, NamedSharding]:
+    """Shardings for a train/prefill batch dict (leading dim = batch)."""
+    out = {}
+    for name, sds in input_specs.items():
+        b_ax = _batch_spec(mesh, sds.shape[0])
+        spec = [b_ax] + [None] * (len(sds.shape) - 1)
+        if name in ("frame_embeds", "patch_embeds") and len(sds.shape) == 3:
+            pass  # (B, T, d): batch-sharded only
+        out[name] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def activation_constraint(mesh: Mesh, seq_shard: bool = True):
+    """Two-point Megatron-SP constraint hook for training.
+
+    kind="carry": the residual stream *between* layers — batch over
+      ("pod","data") and sequence over "model".  This is what the layer-scan
+      remat saves, so it must be small.
+    kind="inner": activations *inside* a block right before the TP matmuls —
+      full sequence (forces the seq all-gather to live inside the loop, which
+      keeps the weight all-gather out of GSPMD's reach: weights stay
+      TP-sharded, activations pay a per-layer gather/reduce-scatter pair).
+    """
+    b_ax = batch_axes(mesh)
+
+    def constrain(h, kind: str = "carry"):
+        if h.ndim != 3:
+            return h
+        seq_ax = None
+        if kind == "carry" and seq_shard and "model" in mesh.shape and \
+                h.shape[1] % mesh.shape["model"] == 0:
+            seq_ax = "model"
+        spec = P(b_ax if b_ax else None, seq_ax)
+        return jax.lax.with_sharding_constraint(h, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+# ----------------------------------------------------------- cache policy ----
+def cache_shardings(cfg, cache_abstract: Pytree, mesh: Mesh,
+                    long_context: bool = False) -> Pytree:
+    """Shardings for a serving cache tree (matched by structure)."""
+    b_ax = batch_axes(mesh)
+    model_sz = _mesh_size(mesh, "model")
+
+    def kv_spec(shape):
+        # (L, B, S, KV, hd)
+        _, b, s, kv, _ = shape
+        batch_ok = b_ax and all(b % _mesh_size(mesh, a) == 0 for a in b_ax) \
+            and b >= max(_mesh_size(mesh, a) for a in b_ax)
+        total_b = 1
+        for a in b_ax:
+            total_b *= _mesh_size(mesh, a)
+        batch_ok = b_ax and b % total_b == 0
+        if long_context or not batch_ok:
+            # batch unshardable: spread the sequence over everything
+            seq_axes = tuple(a for a in ("data", "model") if a in mesh.shape
+                             and s % _mesh_size(mesh, a) == 0)
+            # combined divisibility
+            tot = 1
+            for a in seq_axes:
+                tot *= _mesh_size(mesh, a)
+            seq_axes = seq_axes if tot and s % tot == 0 else ()
+            return P(None, None, seq_axes or None)
+        if model_sz and kv % model_sz == 0:
+            return P(None, b_ax, None, "model")
+        if model_sz and s % model_sz == 0:
+            return P(None, b_ax, "model")
+        return P(None, b_ax)
+
+    def generic_spec(path_shape):
+        shape = path_shape.shape
+        if len(shape) == 5:             # KV cache (L,B,S,KV,hd)
+            return kv_spec(shape)
+        if len(shape) == 0:             # pos scalar
+            return P()
+        # recurrent / ssm states: (L, B, ...) — shard trailing big dim on model
+        total_b = 1
+        for a in b_ax:
+            total_b *= _mesh_size(mesh, a)
+        bspec = b_ax if (len(shape) > 1 and b_ax and
+                         shape[1] % max(total_b, 1) == 0) else None
+        entries = [None, bspec] + [None] * (len(shape) - 2)
+        if model_sz:
+            for i in range(len(shape) - 1, 1, -1):
+                if shape[i] % model_sz == 0 and shape[i] >= model_sz:
+                    entries[i] = "model"
+                    break
+        return P(*entries)
+
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, generic_spec(a)), cache_abstract)
+
+
+def _zero1_spec(shard: NamedSharding, shape: Tuple[int, ...]) -> NamedSharding:
+    """ZeRO-1: additionally shard the first free dim over "data"."""
+    mesh = shard.mesh
+    if "data" not in mesh.shape:
+        return shard
+    dsz = mesh.shape["data"]
+    entries = list(shard.spec) + [None] * (len(shape) - len(shard.spec))
+    used = {a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))}
+    if "data" in used:
+        return shard
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        if e is None and dim % dsz == 0 and dim >= dsz:
+            entries[i] = "data"
+            return NamedSharding(mesh, P(*entries))
+    return shard
+
+
+def opt_state_shardings(param_shardings_tree: Pytree, params_abstract: Pytree
+                        ) -> Pytree:
+    """AdamW moments: param sharding + ZeRO-1 over "data"; step replicated.
+
+    params_abstract (optional) supplies leaf shapes for the ZeRO split; when
+    None the moments just mirror the param shardings."""
+    from repro.optim.adamw import AdamWState
+    mesh = jax.tree.leaves(param_shardings_tree)[0].mesh
+    if params_abstract is None:
+        mom = param_shardings_tree
+    else:
+        mom = jax.tree.map(
+            lambda sh, p: _zero1_spec(sh, p.shape),
+            param_shardings_tree, params_abstract)
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=mom,
+        nu=mom)

@@ -1,0 +1,45 @@
+"""Public jitted wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; on this CPU container they run in
+``interpret=True`` mode (the Pallas interpreter executes the kernel body in
+Python), which is the validation path mandated by the target spec.  The
+backend is auto-detected; callers can force either mode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import coded_matvec as _cmv
+from repro.kernels import count_sketch as _cs
+from repro.kernels import oversketch_matmul as _og
+
+
+def _interpret(explicit: Optional[bool]) -> bool:
+    if explicit is not None:
+        return explicit
+    return jax.default_backend() != "tpu"
+
+
+def count_sketch_apply(h: jax.Array, sigma: jax.Array, a: jax.Array,
+                       block_size: int,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """S^T A for all K sketch blocks: (K,n),(K,n),(n,d) -> (K,b,d)."""
+    return _cs.count_sketch_apply(h, sigma, a, block_size,
+                                  interpret=_interpret(interpret))
+
+
+def oversketch_gram(a_tilde: jax.Array, survivors: jax.Array,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Masked Gram (K,b,d),(K,) -> (d,d), rescaled by survivor count."""
+    return _og.oversketch_gram(a_tilde, survivors,
+                               interpret=_interpret(interpret))
+
+
+def coded_block_matvec(enc: jax.Array, x: jax.Array, erased: jax.Array,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Masked coded block products (W,b,s),(s,),(W,) -> (W,b)."""
+    return _cmv.coded_block_matvec(enc, x, erased,
+                                   interpret=_interpret(interpret))

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def count_sketch_apply(h: jax.Array, sigma: jax.Array, a: jax.Array,
+                       block_size: int) -> jax.Array:
+    """S^T A for all sketch blocks.
+
+    h:     (K, n) int32 bucket indices in [0, block_size)
+    sigma: (K, n) Rademacher signs
+    a:     (n, d)
+    ->     (K, block_size, d)
+    """
+    def one(hk, sk):
+        return jax.ops.segment_sum(a * sk[:, None].astype(a.dtype), hk,
+                                   num_segments=block_size)
+    return jax.vmap(one)(h, sigma)
+
+
+def oversketch_gram(a_tilde: jax.Array, survivors: jax.Array) -> jax.Array:
+    """H_hat = (1/N_avail) sum_k m_k A_tilde_k^T A_tilde_k.
+
+    a_tilde: (K, b, d); survivors: (K,) bool -> (d, d)
+    """
+    m = survivors.astype(a_tilde.dtype)
+    n_avail = jnp.maximum(m.sum(), 1.0)
+    return jnp.einsum("k,kbd,kbe->de", m, a_tilde, a_tilde) / n_avail
+
+
+def coded_block_matvec(enc: jax.Array, x: jax.Array,
+                       erased: jax.Array) -> jax.Array:
+    """Per-worker block products with straggler masking.
+
+    enc: (W, b, s) coded row-blocks; x: (s,); erased: (W,) bool -> (W, b)
+    """
+    prods = jnp.einsum("wbs,s->wb", enc, x)
+    return jnp.where(erased[:, None], 0.0, prods)

@@ -1,0 +1,4 @@
+"""Assigned-architecture model zoo."""
+from repro.models.common import ModelConfig, Spec
+from repro.models.registry import (ModelBundle, ShapeSpec, SHAPES,
+                                   get_bundle, get_config, list_archs)

@@ -1,0 +1,189 @@
+"""Grouped-query attention with RoPE, sliding windows, qk-norm, QKV bias,
+logit softcap, KV caches, cross-attention — the attention substrate for every
+assigned architecture.
+
+Memory-efficient by construction: full-sequence attention is computed with an
+online-softmax scan over key/value chunks (flash-attention structure in pure
+JAX), so the O(S^2) score matrix is never materialized — required for the
+32k-prefill dry-run cells to fit HBM.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ModelConfig, Spec
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ specs ----
+def attn_specs(cfg: ModelConfig, stacked: int = 0, *,
+               cross: bool = False) -> Dict[str, Spec]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.resolved_head_dim
+    lead: Tuple[int, ...] = (stacked,) if stacked else ()
+    lax_: Tuple[Optional[str], ...] = ("layers",) if stacked else ()
+    sp = {
+        "wq": Spec(lead + (d, h, hd), lax_ + ("embed", "heads", "head_dim"),
+                   fan_in_dims=(len(lead),)),
+        "wk": Spec(lead + (d, kv, hd), lax_ + ("embed", "kv_heads",
+                                               "head_dim"),
+                   fan_in_dims=(len(lead),)),
+        "wv": Spec(lead + (d, kv, hd), lax_ + ("embed", "kv_heads",
+                                               "head_dim"),
+                   fan_in_dims=(len(lead),)),
+        "wo": Spec(lead + (h, hd, d), lax_ + ("heads", "head_dim", "embed"),
+                   fan_in_dims=(len(lead), len(lead) + 1)),
+    }
+    if cfg.qkv_bias and not cross:
+        sp["bq"] = Spec(lead + (h, hd), lax_ + ("heads", "head_dim"),
+                        init="zeros")
+        sp["bk"] = Spec(lead + (kv, hd), lax_ + ("kv_heads", "head_dim"),
+                        init="zeros")
+        sp["bv"] = Spec(lead + (kv, hd), lax_ + ("kv_heads", "head_dim"),
+                        init="zeros")
+    if cfg.qk_norm and not cross:
+        sp["q_norm"] = Spec(lead + (hd,), lax_ + ("head_dim",), init="zeros")
+        sp["k_norm"] = Spec(lead + (hd,), lax_ + ("head_dim",), init="zeros")
+    return sp
+
+
+# ------------------------------------------------------------- projections ---
+def project_qkv(cfg: ModelConfig, p: Dict[str, jax.Array], xq: jax.Array,
+                xkv: Optional[jax.Array] = None):
+    """xq (B,S,d) [, xkv (B,T,d) for cross-attention] -> q,k,v."""
+    xkv = xq if xkv is None else xkv
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", xkv, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", xkv, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if "q_norm" in p:
+        q = common.rms_norm(q, p["q_norm"])
+        k = common.rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def out_proj(p: Dict[str, jax.Array], attn: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
+
+
+# --------------------------------------------------- chunked online softmax --
+def _chunk_scores(q, k, scale, softcap):
+    """q (B,Sq,KV,G,hd), k (B,Ck,KV,hd) -> scores (B,KV,G,Sq,Ck) in f32."""
+    s = jnp.einsum("bskgh,bckh->bkgsc", q, k).astype(jnp.float32) * scale
+    return common.softcap(s, softcap)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, window, softcap: float = 0.0,
+                      q_offset: int = 0, kv_len: Optional[jax.Array] = None,
+                      chunk: int = 512, repeat_kv: bool = False) -> jax.Array:
+    """Online-softmax attention over KV chunks (flash structure).
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd); GQA via H = KV * G.
+    window: ints or traced scalar; 0/None => unlimited.  q_offset: the
+    absolute position of q[0] (for decode/prefill continuation).
+    kv_len: optional valid-length mask bound (decode caches are allocated at
+    max length).  Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    if repeat_kv and k.shape[2] != h:
+        # TP-friendly GQA: repeat KV to full heads so the head dim stays
+        # shardable on "model" even when kv_heads < mesh model size.
+        rep = h // k.shape[2]
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    skv, kv_heads = k.shape[1], k.shape[2]
+    g = h // kv_heads
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, kv_heads, g, hd)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, kv_heads, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kv_heads, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m_run, l_run, acc = carry
+        c_idx, k_blk, v_blk = inp
+        scores = _chunk_scores(qg, k_blk, scale, softcap)   # (B,KV,G,Sq,C)
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            w_ok = jnp.asarray(window) <= 0
+            mask &= w_ok | (q_pos[:, None] - k_pos[None, :] <
+                            jnp.maximum(jnp.asarray(window), 1))
+        if kv_len is not None:
+            mask &= k_pos[None, :] < kv_len
+        if pad:
+            mask &= k_pos[None, :] < skv
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m_run, scores.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        prob = jnp.exp(scores - m_new[..., None])
+        l_new = l_run * alpha + prob.sum(axis=-1)
+        pv = jnp.einsum("bkgsc,bckh->bkgsh", prob.astype(v_blk.dtype), v_blk)
+        acc = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kv_heads, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv_heads, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kv_heads, g, sq, hd), q.dtype)
+    # Remat the chunk body: backward recomputes scores/probs per chunk
+    # instead of saving the (B, KV, G, Sq, C) tensors for every chunk.
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-30).astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+
+
+# ------------------------------------------------------------------ decode ---
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window=None,
+                     softcap: float = 0.0) -> jax.Array:
+    """One-token attention against a preallocated cache.
+
+    q: (B, 1, H, hd); k_cache/v_cache: (B, S_max, KV, hd); pos: scalar —
+    the index of the *current* token (cache valid through pos inclusive).
+    """
+    b, _, h, hd = q.shape
+    s_max, kv_heads = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv_heads
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, kv_heads, g, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg,
+                        k_cache).astype(jnp.float32) * scale
+    scores = common.softcap(scores, softcap)
+    k_pos = jnp.arange(s_max)
+    mask = k_pos <= pos
+    if window is not None:
+        w_ok = jnp.asarray(window) <= 0
+        mask &= w_ok | (pos - k_pos < jnp.maximum(jnp.asarray(window), 1))
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    prob = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", prob.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def update_cache(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
+                 v_new: jax.Array, pos) -> Tuple[jax.Array, jax.Array]:
+    """Write S_new tokens at position ``pos`` (dynamic)."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    return k_cache, v_cache

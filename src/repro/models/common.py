@@ -1,0 +1,330 @@
+"""Model substrate shared pieces: the architecture config, parameter spec
+trees (shape + logical sharding axes, materialized lazily so 235B-parameter
+configs never allocate), norms, embeddings and activation helpers.
+
+Logical axis names used throughout (mapped to mesh axes by
+``repro.distributed.sharding``):
+  embed, heads, kv_heads, head_dim, ffn, vocab, experts, layers, rnn, state,
+  conv, classes
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0              # 0 => d_model // num_heads
+    # attention flavour
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    global_rope_theta: float = 0.0   # gemma3 uses a larger theta globally
+    window_size: int = 0             # sliding-window size for local layers
+    local_global_pattern: int = 0    # N => N local layers per 1 global
+    logit_softcap: float = 0.0
+    # norm / mlp flavour
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    mlp_type: str = "swiglu"         # swiglu | gelu
+    pos_embed: str = "rope"          # rope | sinusoidal | learned
+    tie_embeddings: bool = False
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_group_size: int = 256
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    # recurrent (RG-LRU)
+    rnn_width: int = 0
+    attn_every: int = 0              # hybrid: 1 attention per `attn_every`
+    # encoder-decoder
+    encoder_layers: int = 0
+    encoder_seq: int = 0
+    # multimodal stub frontends
+    frontend: Optional[str] = None   # audio_stub | patch_stub
+    num_patches: int = 0
+    max_seq: int = 131_072
+    dtype: str = "bfloat16"
+    # perf knobs (EXPERIMENTS.md §Perf iterates these)
+    attn_chunk: int = 512            # KV chunk for online-softmax attention
+    ce_chunk: int = 1024             # sequence chunk for fused CE loss
+    repeat_kv: bool = True           # repeat GQA KV to full heads (TP-friendly)
+    windowed_decode_cache: bool = False  # local layers: ring-buffer KV cache
+    #   bounded by window_size instead of full context (5:1 gemma3 pattern
+    #   cuts decode cache bytes ~4.8x; see EXPERIMENTS.md §Perf)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_inner // self.ssm_head_dim
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        """A reduced copy for smoke tests."""
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declarative parameter: shape + logical axes + init recipe."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"            # normal | zeros | ones
+    fan_in_dims: Tuple[int, ...] = ()   # dims whose product scales init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def materialize(specs: Pytree, key: jax.Array, dtype) -> Pytree:
+    """Build real parameters from a spec tree (smoke-test scale only)."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, Spec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        else:
+            fan_in = 1
+            for dim in spec.fan_in_dims:
+                fan_in *= spec.shape[dim]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+            out.append(scale * jax.random.normal(k, spec.shape, dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(specs: Pytree, dtype) -> Pytree:
+    """ShapeDtypeStruct tree — the dry-run path, zero allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+        is_leaf=lambda x: isinstance(x, Spec))
+
+
+def spec_axes(specs: Pytree) -> Pytree:
+    """Tree of logical-axis tuples, aligned with the param tree."""
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, Spec))
+
+
+def param_count(specs: Pytree) -> int:
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, Spec)))
+
+
+# ----------------------------------------------------------------- layers ----
+def maybe_constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh; no-op when tracing
+    outside any mesh context (unit tests, single-device paths)."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, TypeError, RuntimeError):
+        return x
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, x: jax.Array, p: Dict[str, jax.Array]
+               ) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def norm_spec(cfg: ModelConfig, dim: int, stacked: int = 0) -> Dict[str, Spec]:
+    shape = (stacked, dim) if stacked else (dim,)
+    axes = (("layers", "embed") if stacked else ("embed",))
+    out = {"scale": Spec(shape, axes, init="zeros" if cfg.norm_type ==
+                         "rmsnorm" else "ones")}
+    if cfg.norm_type == "layernorm":
+        out["bias"] = Spec(shape, axes, init="zeros")
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def embed_lookup(embed: jax.Array, tokens: jax.Array,
+                 grad_chunk: int = 512) -> jax.Array:
+    """Token embedding with a sharding-aware backward.
+
+    Forward is a plain gather.  The *default* gather-VJP is a scatter-add
+    whose accumulator GSPMD keeps replicated — a full (V, d) f32 buffer per
+    chip (2.5 GB at 152k x 4096).  The custom backward instead accumulates
+    chunked one-hot matmuls with the vocab dim constrained to "model", so the
+    gradient is born sharded.
+    """
+    return jnp.take(embed, tokens, axis=0)
+
+
+def _embed_lookup_fwd(embed, tokens, grad_chunk):
+    # zero-size sentinel carries the param dtype through the residuals
+    # (raw dtypes are not valid JAX residual types)
+    return jnp.take(embed, tokens, axis=0), (
+        tokens, embed.shape[0], jnp.zeros((0,), embed.dtype))
+
+
+def _embed_lookup_bwd(grad_chunk, res, g):
+    tokens, vocab, dtype_probe = res
+    dtype = dtype_probe.dtype
+    b, s = tokens.shape
+    cs = min(grad_chunk, s)
+    n_chunks = -(-s // cs)
+    pad = n_chunks * cs - s
+    if pad:
+        tokens = jnp.pad(tokens, ((0, 0), (0, pad)), constant_values=0)
+        g = jnp.pad(g, ((0, 0), (0, pad), (0, 0)))
+    # dynamic_slice chunking (NOT reshape) — preserves batch sharding.
+
+    def body(acc, i):
+        tk = jax.lax.dynamic_slice_in_dim(tokens, i * cs, cs, axis=1)
+        gk = jax.lax.dynamic_slice_in_dim(g, i * cs, cs, axis=1)
+        onehot = jax.nn.one_hot(tk, vocab, dtype=gk.dtype)     # (B, cs, V)
+        onehot = maybe_constrain(onehot, None, None, "model")
+        part = jnp.einsum("bsv,bsd->vd", onehot, gk)
+        part = maybe_constrain(part, "model")
+        return acc + part, None
+
+    acc0 = maybe_constrain(
+        jnp.zeros((vocab, g.shape[-1]), jnp.float32), "model")
+    grad_embed, _ = jax.lax.scan(jax.checkpoint(body), acc0,
+                                 jnp.arange(n_chunks))
+    return (grad_embed.astype(dtype), None)
+
+
+embed_lookup.defvjp(_embed_lookup_fwd, _embed_lookup_bwd)
+
+
+def sinusoidal_positions(num: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(num)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2) * (-math.log(10_000.0) / dim))
+    pe = jnp.zeros((num, dim))
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta) -> jax.Array:
+    """Rotary embedding.  x: (..., seq, heads, head_dim); positions: (seq,)
+    or (batch, seq); theta may be a traced scalar (per-layer theta)."""
+    hd = x.shape[-1]
+    freq = jnp.exp(jnp.arange(0, hd // 2, dtype=jnp.float32) *
+                   (-2.0 / hd) * jnp.log(theta))
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+        ang = ang[None, :, None, :]              # (1, seq, 1, hd/2)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freq
+        ang = ang[:, :, None, :]                 # (batch, seq, 1, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore_id: int = -1) -> jax.Array:
+    """Mean token NLL.  logits (B, S, V) any float dtype; labels (B, S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def chunked_cross_entropy(h: jax.Array, head: jax.Array, labels: jax.Array,
+                          *, transpose_head: bool = False,
+                          chunk: int = 1024, ignore_id: int = -1
+                          ) -> jax.Array:
+    """Mean token NLL with the vocab projection fused per sequence chunk, so
+    the full (B, S, V) logits tensor is never materialized — required for the
+    256k-vocab training cells to fit HBM.
+
+    h (B, S, d); head (d, V), or (V, d) with transpose_head=True (tied).
+    """
+    b, s, _ = h.shape
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=ignore_id)
+
+    # NOTE: chunks are carved with dynamic_slice, NOT reshape+transpose —
+    # reshaping a batch-sharded (B, S, d) into (B, nc, c, d) makes GSPMD drop
+    # the batch sharding and gather the full global batch (observed: a
+    # 5 GB/chip f32 logits chunk).  Slices preserve operand sharding.
+    def body(carry, i):
+        nll_sum, count = carry
+        h_blk = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+        l_blk = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk,
+                                             axis=1)
+        eq = "bsd,vd->bsv" if transpose_head else "bsd,dv->bsv"
+        logits = jnp.einsum(eq, h_blk, head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l_blk, 0)[..., None], axis=-1)[..., 0]
+        mask = (l_blk != ignore_id).astype(jnp.float32)
+        return (nll_sum + ((lse - gold) * mask).sum(),
+                count + mask.sum()), None
+
+    (nll_sum, count), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(n_chunks))
+    return nll_sum / jnp.maximum(count, 1.0)

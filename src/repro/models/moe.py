@@ -1,0 +1,113 @@
+"""Mixture-of-Experts layer (Qwen3-MoE style: top-k softmax routing over 128
+experts, SwiGLU experts, renormalized gates).
+
+Baseline dispatch is the GShard/Switch dense one-hot formulation, grouped so
+the (tokens, experts, capacity) dispatch tensor stays VMEM-friendly:
+tokens are processed in groups (scan), each group builds a one-hot dispatch
+einsum — all-to-all-free, lowers to plain matmuls + the mesh's existing
+collectives, and shards cleanly with experts on the "model" axis.  A ragged
+all-to-all dispatch is a recorded perf alternative (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Spec
+
+
+def moe_specs(cfg: ModelConfig, stacked: int = 0) -> Dict[str, Spec]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    lead = (stacked,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    return {
+        "router": Spec(lead + (d, e), lax_ + ("embed", "experts"),
+                       fan_in_dims=(len(lead),)),
+        # per-expert ffn dim uses the distinct "expert_ffn" logical axis:
+        # sharded over "data", and the expert einsums keep it sharded
+        # end-to-end (2-D expert x ffn parallelism, no hoisted gathers).
+        "w_gate": Spec(lead + (e, d, f),
+                       lax_ + ("experts", "embed", "expert_ffn"),
+                       fan_in_dims=(len(lead) + 1,)),
+        "w_up": Spec(lead + (e, d, f),
+                     lax_ + ("experts", "embed", "expert_ffn"),
+                     fan_in_dims=(len(lead) + 1,)),
+        "w_down": Spec(lead + (e, f, d),
+                       lax_ + ("experts", "expert_ffn", "embed"),
+                       fan_in_dims=(len(lead) + 1,)),
+    }
+
+
+def _capacity(group: int, cfg: ModelConfig) -> int:
+    cap = int(group * cfg.experts_per_token * cfg.moe_capacity_factor /
+              cfg.num_experts)
+    return max(cap, cfg.experts_per_token)
+
+
+def moe_ffn(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+            group_size: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar).
+
+    Sequence-grouped one-hot dispatch: groups are *sequence* chunks per batch
+    row (the batch dim survives intact, so data-parallel sharding propagates
+    through the dispatch einsums), processed with lax.scan so the dispatch
+    tensors are temporaries of one group.  Experts shard over "model", the
+    per-expert ffn dim over "data" (see moe_specs).
+    """
+    b, s, d = x.shape
+    g_sz = min(group_size or cfg.moe_group_size, s)
+    n_groups = -(-s // g_sz)
+    pad = n_groups * g_sz - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    xg = x.reshape(b, n_groups, g_sz, d).transpose(1, 0, 2, 3)
+    cap = _capacity(g_sz, cfg)
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    router = p["router"]
+
+    def group_fn(carry, xi):                                  # xi (B, g, d)
+        # --- routing --------------------------------------------------------
+        logits = jnp.einsum("bgd,de->bge", xi, router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_idx = jax.lax.top_k(probs, k)       # (B, g, k)
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)           # renormalize
+        # --- capacity-bounded position within each expert (per batch row) ---
+        onehot_i = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (B,g,k,E)
+        flat = onehot_i.reshape(-1, g_sz * k, e)
+        pos_in_expert = jnp.cumsum(flat, axis=1) - flat
+        pos = (pos_in_expert * flat).sum(-1).reshape(-1, g_sz, k)
+        keep = pos < cap
+        # --- dispatch tensor (B, g, k, E, C) collapsed over k ----------------
+        disp = (jax.nn.one_hot(expert_idx, e, dtype=xi.dtype)[..., None] *
+                jax.nn.one_hot(pos, cap, dtype=xi.dtype)[..., None, :])
+        disp = disp * keep[..., None, None].astype(xi.dtype)
+        comb = disp * gate_vals[..., None, None].astype(xi.dtype)
+        disp_t = disp.sum(2)                                  # (B, g, E, C)
+        # --- expert compute ---------------------------------------------------
+        xe = jnp.einsum("bgec,bgd->becd", disp_t, xi)         # (B, E, C, d)
+        # Expert-parallel reshard (the all-to-all of GShard-style MoE): the
+        # dispatched tokens go from batch-sharded to expert-sharded so the
+        # expert matmuls run with E on "model" and the ffn dim on "data"
+        # without conflicting with the batch axis.
+        from repro.models.common import maybe_constrain
+        xe = maybe_constrain(xe, None, "model")
+        hidden = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+        hidden = jax.nn.silu(hidden) * jnp.einsum("becd,edf->becf", xe,
+                                                  p["w_up"])
+        ye = jnp.einsum("becf,efd->becd", hidden, p["w_down"])
+        yi = jnp.einsum("bgkec,becd->bgd", comb, ye)
+        # --- load-balance auxiliary loss (Switch style) -----------------------
+        density = onehot_i.sum(2).astype(jnp.float32).mean((0, 1))   # (E,)
+        aux = e * jnp.mean(probs.mean((0, 1)) * density) * k
+        return carry + aux, yi
+
+    # Remat each group: backward re-runs routing+dispatch per group instead
+    # of keeping every group's (B, E, C, d) dispatch tensors alive.
+    aux_total, yg = jax.lax.scan(jax.checkpoint(group_fn),
+                                 jnp.zeros((), jnp.float32), xg)
+    y = yg.transpose(1, 0, 2, 3).reshape(b, n_groups * g_sz, d)[:, :s]
+    return y, aux_total / n_groups

@@ -1,0 +1,157 @@
+"""Model bundle: a uniform interface over all families, consumed by the
+trainer, the server and the dry-run launcher.
+
+Every architecture exposes:
+  specs()                -> param Spec tree (shapes + logical sharding axes)
+  init(key)              -> real params (reduced/smoke scale only)
+  abstract()             -> ShapeDtypeStruct params (dry-run, no allocation)
+  loss(params, batch)    -> scalar train loss
+  init_cache(batch, s)   -> serving cache
+  prefill(params, ...)   -> (logits, cache)
+  decode(params, cache, token) -> (logits, cache)
+  input_specs(shape)     -> ShapeDtypeStruct batch for the dry-run
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, encdec, transformer
+from repro.models.common import ModelConfig
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+    name: str                 # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                 # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+class ModelBundle:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.is_encdec = cfg.family == "encdec"
+        self._mod = encdec if self.is_encdec else transformer
+
+    # ------------------------------------------------------------- params --
+    def specs(self) -> Pytree:
+        if self.is_encdec:
+            return encdec.encdec_specs(self.cfg)
+        return transformer.decoder_specs(self.cfg)
+
+    def init(self, key: jax.Array) -> Pytree:
+        return common.materialize(self.specs(), key, self.cfg.compute_dtype)
+
+    def abstract(self) -> Pytree:
+        return common.abstract(self.specs(), self.cfg.compute_dtype)
+
+    def logical_axes(self) -> Pytree:
+        return common.spec_axes(self.specs())
+
+    def param_count(self) -> int:
+        return common.param_count(self.specs())
+
+    # --------------------------------------------------------------- steps --
+    def loss(self, params: Pytree, batch: Dict[str, jax.Array],
+             constrain=None) -> jax.Array:
+        return self._mod.loss_fn(self.cfg, params, batch, constrain)
+
+    def init_cache(self, batch: int, max_seq: int, dtype=None) -> Pytree:
+        return self._mod.init_cache(self.cfg, batch, max_seq, dtype)
+
+    def prefill(self, params: Pytree, tokens: jax.Array, cache: Pytree,
+                extra: Optional[jax.Array] = None):
+        if self.is_encdec:
+            return encdec.prefill(self.cfg, params, tokens, cache, extra)
+        return transformer.prefill(self.cfg, params, tokens, cache, extra)
+
+    def decode(self, params: Pytree, cache: Pytree, token: jax.Array):
+        return self._mod.decode_step(self.cfg, params, cache, token)
+
+    # --------------------------------------------------------- input specs --
+    def input_specs(self, shape: ShapeSpec, *, reduced: bool = False
+                    ) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of one cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            if self.is_encdec:
+                return {
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32),
+                    "frame_embeds": jax.ShapeDtypeStruct(
+                        (b, cfg.encoder_seq, cfg.d_model), cfg.compute_dtype),
+                }
+            out = {
+                "tokens": jax.ShapeDtypeStruct((b, s - cfg.num_patches), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+            if cfg.frontend == "patch_stub":
+                out["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.num_patches, cfg.d_model), cfg.compute_dtype)
+            return out
+        if shape.kind == "prefill":
+            out = {"tokens": jax.ShapeDtypeStruct(
+                (b, s - cfg.num_patches), i32)}
+            if self.is_encdec:
+                out["frame_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.encoder_seq, cfg.d_model), cfg.compute_dtype)
+            elif cfg.frontend == "patch_stub":
+                out["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.num_patches, cfg.d_model), cfg.compute_dtype)
+            return out
+        # decode: one new token against a seq_len cache
+        return {"token": jax.ShapeDtypeStruct((b,), i32)}
+
+    def supports(self, shape: ShapeSpec) -> Tuple[bool, str]:
+        """Cell applicability (DESIGN.md §Arch-applicability)."""
+        if shape.name == "long_500k" and self.cfg.family not in ("ssm",
+                                                                 "hybrid"):
+            return False, ("full-attention architecture: 500k decode needs "
+                           "sub-quadratic attention (skip per assignment)")
+        return True, ""
+
+
+# --------------------------------------------------------------- registry ----
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        from repro import configs  # noqa: F401 — populate registry
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def get_bundle(name: str) -> ModelBundle:
+    return ModelBundle(get_config(name))
+
+
+def list_archs():
+    if not _REGISTRY:
+        from repro import configs  # noqa: F401
+    return sorted(_REGISTRY)

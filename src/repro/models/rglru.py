@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Gated linear recurrence:
+    r_t = sigmoid(W_r u_t + b_r)           (recurrence gate)
+    i_t = sigmoid(W_i u_t + b_i)           (input gate)
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill evaluates the recurrence with an associative scan (log-depth
+on TPU); decode is the O(1) step.  The block wraps the recurrence with the
+Griffin structure: conv1d(4) front, GeLU gate branch, output projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Spec
+
+_C = 8.0
+
+
+def rglru_specs(cfg: ModelConfig, stacked: int = 0) -> Dict[str, Spec]:
+    d, r = cfg.d_model, cfg.rnn_width
+    lead = (stacked,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    return {
+        "w_x": Spec(lead + (d, r), lax_ + ("embed", "rnn"),
+                    fan_in_dims=(len(lead),)),
+        "w_gate": Spec(lead + (d, r), lax_ + ("embed", "rnn"),
+                       fan_in_dims=(len(lead),)),
+        "conv_w": Spec(lead + (4, r), lax_ + ("conv", "rnn")),
+        "conv_b": Spec(lead + (r,), lax_ + ("rnn",), init="zeros"),
+        "w_r": Spec(lead + (r, r), lax_ + ("rnn", "rnn"),
+                    fan_in_dims=(len(lead),)),
+        "b_r": Spec(lead + (r,), lax_ + ("rnn",), init="zeros"),
+        "w_i": Spec(lead + (r, r), lax_ + ("rnn", "rnn"),
+                    fan_in_dims=(len(lead),)),
+        "b_i": Spec(lead + (r,), lax_ + ("rnn",), init="zeros"),
+        "lam": Spec(lead + (r,), lax_ + ("rnn",), init="ones"),
+        "w_out": Spec(lead + (r, d), lax_ + ("rnn", "embed"),
+                      fan_in_dims=(len(lead),)),
+    }
+
+
+def _gates(p, u):
+    r_gate = jax.nn.sigmoid(u @ p["w_r"] + p["b_r"]).astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(u @ p["w_i"] + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r_gate
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, beta.astype(u.dtype) * (i_gate * u)
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
+
+
+def rglru_forward(cfg: ModelConfig, p: Dict[str, jax.Array],
+                  x_in: jax.Array) -> jax.Array:
+    """Full-sequence Griffin recurrent block.  (B, S, d) -> (B, S, d)."""
+    gate_branch = jax.nn.gelu(x_in @ p["w_gate"])
+    u = _causal_conv(x_in @ p["w_x"], p["conv_w"], p["conv_b"])
+    a, b = _gates(p, u)                       # (B,S,R) each
+
+    # associative scan over time: (a2, b2) o (a1, b1) = (a1*a2, a2*b1 + b2)
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(
+        combine, (a, b.astype(jnp.float32)), axis=1)
+    y = (h.astype(x_in.dtype) * gate_branch) @ p["w_out"]
+    return y
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    r = cfg.rnn_width
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, 3, r), dtype),
+    }
+
+
+def rglru_decode_step(cfg: ModelConfig, p: Dict[str, jax.Array],
+                      state: Dict[str, jax.Array], x_tok: jax.Array
+                      ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """One-token update.  x_tok (B, d) -> (state, y (B, d))."""
+    gate_branch = jax.nn.gelu(x_tok @ p["w_gate"])
+    u_raw = x_tok @ p["w_x"]                              # (B, R)
+    hist = jnp.concatenate([state["conv"], u_raw[:, None, :]], axis=1)
+    u = (hist * p["conv_w"]).sum(axis=1) + p["conv_b"]
+    a, b = _gates(p, u)
+    h = a * state["h"] + b.astype(jnp.float32)
+    y = (h.astype(x_tok.dtype) * gate_branch) @ p["w_out"]
+    return {"h": h, "conv": hist[:, 1:]}, y

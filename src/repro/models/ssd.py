@@ -1,0 +1,177 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) layer.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the
+contribution is computed as a masked quadratic form (the "attention-like"
+dual); across chunks a short linear recurrence carries the (H, P, N) state.
+Decode is the O(1) recurrent update.  Pure JAX, scan-friendly, shards with
+heads on the "model" axis.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Spec
+
+
+def ssd_specs(cfg: ModelConfig, stacked: int = 0) -> Dict[str, Spec]:
+    d = cfg.d_model
+    din = cfg.ssm_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    conv_dim = din + 2 * n                      # x, B, C share the conv
+    lead = (stacked,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    return {
+        # fused input projection: [z (din), x (din), B (n), C (n), dt (h)]
+        "w_in": Spec(lead + (d, 2 * din + 2 * n + h),
+                     lax_ + ("embed", "rnn"), fan_in_dims=(len(lead),)),
+        "conv_w": Spec(lead + (cfg.ssm_conv, conv_dim),
+                       lax_ + ("conv", "rnn")),
+        "conv_b": Spec(lead + (conv_dim,), lax_ + ("rnn",), init="zeros"),
+        "a_log": Spec(lead + (h,), lax_ + ("heads",), init="zeros"),
+        "dt_bias": Spec(lead + (h,), lax_ + ("heads",), init="zeros"),
+        "d_skip": Spec(lead + (h,), lax_ + ("heads",), init="ones"),
+        "norm": Spec(lead + (din,), lax_ + ("rnn",), init="zeros"),
+        "w_out": Spec(lead + (din, d), lax_ + ("rnn", "embed"),
+                      fan_in_dims=(len(lead),)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    din, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :din]
+    x = proj[..., din:2 * din]
+    b_mat = proj[..., 2 * din:2 * din + n]
+    c_mat = proj[..., 2 * din + n:2 * din + 2 * n]
+    dt = proj[..., 2 * din + 2 * n:]
+    return z, x, b_mat, c_mat, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, x (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def ssd_forward(cfg: ModelConfig, p: Dict[str, jax.Array], x_in: jax.Array,
+                ) -> jax.Array:
+    """Full-sequence SSD.  x_in (B, S, d) -> (B, S, d)."""
+    bsz, s_orig, _ = x_in.shape
+    din, n, h, hp = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s_orig)
+    s_pad = (-s_orig) % q
+    if s_pad:   # causal => zero right-padding never affects real positions
+        x_in = jnp.pad(x_in, ((0, 0), (0, s_pad), (0, 0)))
+    s = s_orig + s_pad
+    nc = s // q
+
+    proj = x_in @ p["w_in"]
+    z, xr, b_mat, c_mat, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xr, b_mat, c_mat], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xr, b_mat, c_mat = (conv_out[..., :din], conv_out[..., din:din + n],
+                        conv_out[..., din + n:])
+
+    xh = xr.reshape(bsz, s, h, hp)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                   # (H,)
+    da = dt * a                                                    # (B,S,H)
+
+    # chunked views
+    xc = xh.reshape(bsz, nc, q, h, hp)
+    bc = b_mat.reshape(bsz, nc, q, n)
+    cc = c_mat.reshape(bsz, nc, q, n)
+    dtc = dt.reshape(bsz, nc, q, h)
+    dac = da.reshape(bsz, nc, q, h)
+
+    cum = jnp.cumsum(dac, axis=2)                                  # (B,Nc,Q,H)
+    # intra-chunk (dual/quadratic) term
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # (B,Nc,Q,Q,H)
+    idx = jnp.arange(q)
+    causal = idx[:, None] >= idx[None, :]
+    l_mat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)                     # (B,Nc,Q,Q)
+    w_ij = cb[..., None] * l_mat * dtc[:, :, None, :, :]           # (B,Nc,Q,Q,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w_ij.astype(xc.dtype), xc)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                # (B,Nc,Q,H)
+    sb = (decay_to_end * dtc)[..., None] * bc[:, :, :, None, :]    # (B,Nc,Q,H,N)
+    states = jnp.einsum("bcqhn,bcqhp->bchpn", sb.astype(xc.dtype), xc)
+
+    # inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                        # (B,Nc,H)
+
+    def carry_fn(hprev, inp):
+        st, dec = inp
+        hnew = hprev * dec[..., None, None].astype(hprev.dtype) + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((bsz, h, hp, n), xc.dtype)
+    _, h_before = jax.lax.scan(
+        carry_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)                   # (B,Nc,H,P,N)
+
+    # inter-chunk contribution: C_i exp(cum_i) h_{c-1}
+    in_decay = jnp.exp(cum)                                        # (B,Nc,Q,H)
+    y_off = jnp.einsum("bcqn,bchpn->bcqhp", cc.astype(xc.dtype), h_before)
+    y_off = y_off * in_decay[..., None].astype(xc.dtype)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, hp)
+    y = y + xh * p["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(bsz, s, din)
+    if s_pad:
+        y = y[:, :s_orig]
+        z = z[:, :s_orig]
+    # gated RMSNorm then output projection (mamba2 block structure)
+    from repro.models import common as cm
+    y = cm.rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["w_out"]
+
+
+def ssd_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    din, n, h, hp = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    conv_dim = din + 2 * n
+    return {
+        "ssm": jnp.zeros((batch, h, hp, n), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssd_decode_step(cfg: ModelConfig, p: Dict[str, jax.Array],
+                    state: Dict[str, jax.Array], x_tok: jax.Array
+                    ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """One-token recurrent update.  x_tok (B, d) -> (new_state, y (B, d))."""
+    din, n, h, hp = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    proj = x_tok @ p["w_in"]
+    z, xr, b_mat, c_mat, dt = _split_proj(cfg, proj[:, None, :])
+    conv_in = jnp.concatenate([xr, b_mat, c_mat], axis=-1)         # (B,1,C)
+    hist = jnp.concatenate([state["conv"], conv_in], axis=1)       # (B,K,C)
+    conv_out = jax.nn.silu((hist * p["conv_w"]).sum(axis=1) + p["conv_b"])
+    new_conv = hist[:, 1:]
+    xr = conv_out[:, :din].reshape(-1, h, hp)
+    b_t = conv_out[:, din:din + n]
+    c_t = conv_out[:, din + n:]
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                        # (B,H)
+    db = dt[..., None] * b_t[:, None, :]                           # (B,H,N)
+    upd = xr[..., None] * db[:, :, None, :]                        # (B,H,P,N)
+    ssm = state["ssm"] * decay[..., None, None].astype(state["ssm"].dtype) \
+        + upd.astype(state["ssm"].dtype)
+    y = jnp.einsum("bhpn,bn->bhp", ssm, c_t.astype(ssm.dtype))
+    y = y + xr * p["d_skip"][None, :, None].astype(xr.dtype)
+    y = y.reshape(-1, din)
+    from repro.models import common as cm
+    y = cm.rms_norm(y * jax.nn.silu(z[:, 0]), p["norm"])
+    return {"ssm": ssm, "conv": new_conv}, y @ p["w_out"]

@@ -1,0 +1,7 @@
+"""Baseline optimizers (paper Sec. 5 comparisons) + the LM AdamW path."""
+from repro.optim.first_order import FirstOrderConfig, first_order
+from repro.optim.giant import GiantConfig, giant
+from repro.optim.exact_newton import exact_newton
+from repro.optim.gradient_coding import (assignment, decode_weights,
+                                         gradient_coding_phase)
+from repro.optim import adamw

@@ -1,0 +1,83 @@
+"""AdamW — the framework's standard optimizer for the (non-convex) LM
+training path.  Pure-pytree implementation (no optax dependency), with
+decoupled weight decay, global-norm clipping and a linear-warmup cosine
+schedule; state is a pytree so it checkpoints/reshards like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def init(params: Any) -> AdamWState:
+    """First moment in param dtype (bf16-safe); second moment in f32 —
+    bf16 cannot represent small squared-gradient magnitudes."""
+    mu = jax.tree.map(jnp.zeros_like, params)
+    nu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: Any) -> jax.Array:
+    """Global L2 norm WITHOUT flattening: a 1-D reshape of a 2-D-sharded
+    array forces GSPMD to all-gather the full tensor (observed: +7 GB/chip);
+    an all-axis reduction keeps every shard local."""
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)))
+
+
+def apply(cfg: AdamWConfig, grads: Any, state: AdamWState,
+          params: Any) -> tuple[Any, AdamWState]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    scale = scale.astype(jax.tree.leaves(grads)[0].dtype)
+    grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    step = state.step + 1
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: cfg.b2 * v +
+        (1 - cfg.b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    mu_hat_scale = 1.0 / (1 - cfg.b1 ** step.astype(jnp.float32))
+    nu_hat_scale = 1.0 / (1 - cfg.b2 ** step.astype(jnp.float32))
+    lr = schedule(cfg, state.step)
+
+    def upd(p, m, v):
+        u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + cfg.eps)
+        return (p - lr * (u + cfg.weight_decay * p)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)

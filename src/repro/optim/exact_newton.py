@@ -1,0 +1,28 @@
+"""Exact Newton baseline (paper Figs. 6-10): full Hessian computed
+distributedly with speculative-execution straggler mitigation, i.e.
+OverSketched Newton's loop with ``hessian_policy="exact_speculative"``."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.core import newton, straggler
+from repro.core.objectives import Dataset
+
+
+def exact_newton(objective, data: Dataset, w0,
+                 iters: int = 20, gradient_policy: str = "coded",
+                 seed: int = 0, unit_step: bool = True,
+                 solver: str = "auto",
+                 model: Optional[straggler.StragglerModel] = straggler.StragglerModel(),
+                 track_test_error: bool = False) -> Dict[str, List[float]]:
+    cfg = newton.NewtonConfig(
+        iters=iters, hessian_policy="exact_speculative",
+        gradient_policy=gradient_policy, unit_step=unit_step, solver=solver,
+        seed=seed, track_test_error=track_test_error)
+    res = newton.oversketched_newton(objective, data, w0, cfg, model=model)
+    hist = res.history
+    hist["w"] = res.w
+    return hist

@@ -1,0 +1,151 @@
+"""GIANT: Globally Improved Approximate Newton Direction (Wang et al., 2018)
+— the paper's main second-order serverful baseline (Fig. 4).
+
+Two distributed stages per iteration:
+  1. workers compute local gradients from their shard; master sums -> full g;
+  2. workers compute a local Newton direction p_i = H_i^{-1} g from their
+     *local* Hessian; master averages -> p.
+
+Straggler handling variants (paper Fig. 6): wait_all (uncoded), gcode
+(gradient coding on stage 1), ignore (drop stragglers in both stages — the
+"mini-batch" curve).  Both stages are scored on the simulated clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import solvers, straggler
+from repro.core.objectives import Dataset
+from repro.optim.gradient_coding import gradient_coding_phase
+
+
+@dataclasses.dataclass(frozen=True)
+class GiantConfig:
+    iters: int = 20
+    num_workers: int = 60
+    policy: str = "wait_all"     # wait_all | gcode | ignore
+    gcode_redundancy: int = 2
+    unit_step: bool = True
+    cg_iters: int = 30
+    seed: int = 0
+    track_test_error: bool = False
+
+
+def _shard_bounds(n: int, w: int):
+    per = -(-n // w)
+    return [(i * per, min((i + 1) * per, n)) for i in range(w)]
+
+
+def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
+          model: Optional[straggler.StragglerModel] = straggler.StragglerModel()
+          ) -> Dict[str, List[float]]:
+    """Runs GIANT; requires objective.hess_sqrt + gradient on sub-datasets."""
+    key = jax.random.PRNGKey(cfg.seed)
+    clock = straggler.SimClock(model) if model is not None else None
+    n, d = data.x.shape
+    bounds = _shard_bounds(n, cfg.num_workers)
+
+    # Pad shards to equal size for a stacked vmap (last shard may be short).
+    per = bounds[0][1] - bounds[0][0]
+    xs, ys, wts = [], [], []
+    for lo, hi in bounds:
+        pad = per - (hi - lo)
+        xs.append(jnp.pad(data.x[lo:hi], ((0, pad), (0, 0))))
+        ys.append(jnp.pad(data.y[lo:hi], ((0, pad),) + ((0, 0),) * (data.y.ndim - 1)))
+        wts.append(jnp.pad(jnp.ones(hi - lo), (0, pad)))
+    xs, ys, wts = jnp.stack(xs), jnp.stack(ys), jnp.stack(wts)
+
+    def local_grad(x_i, y_i, wt_i, w_vec):
+        return jax.grad(lambda wv: objective.masked_value(
+            wv, Dataset(x=x_i, y=y_i), wt_i))(w_vec)
+
+    def local_newton(x_i, y_i, wt_i, w_vec, g):
+        # Local Hessian via the shard's hess_sqrt (masked rows zeroed).
+        a_i = objective.hess_sqrt(w_vec, Dataset(x=x_i, y=y_i))
+        a_i = a_i * wt_i[: a_i.shape[0], None] if a_i.shape[0] == x_i.shape[0] \
+            else a_i  # softmax hess_sqrt has n*K rows; mask repeats
+        scale = x_i.shape[0] / jnp.maximum(wt_i.sum(), 1.0)
+        h_i = scale * (a_i.T @ a_i) + \
+            (objective.hess_reg + 1e-8) * jnp.eye(d, dtype=a_i.dtype)
+        return solvers.psd_solve(h_i, g)
+
+    lg = jax.jit(jax.vmap(local_grad, in_axes=(0, 0, 0, None)))
+    ln = jax.jit(jax.vmap(local_newton, in_axes=(0, 0, 0, None, None)))
+    val_fn = jax.jit(objective.value)
+    grad_fn = jax.jit(objective.gradient)
+
+    hist: Dict[str, List[float]] = {k: [] for k in (
+        "iter", "fval", "gnorm", "step", "time", "test_error")}
+    w = jnp.asarray(w0, jnp.float32)
+
+    grad_flops = 2.0 * per * d                    # local gradient pass
+    # GIANT's local solves are CG / Hessian-free (Wang et al.): cg_iters
+    # Hessian-vector products over the local shard per iteration.
+    newton_flops = 2.0 * per * d * cfg.cg_iters
+    for t in range(cfg.iters):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+
+        # --- stage 1: gradient -------------------------------------------
+        shard_sizes = wts.sum(axis=1)
+        if cfg.policy == "ignore" and clock is not None:
+            _, fin = clock.phase(k1, cfg.num_workers, policy="k_of_n",
+                                 k=max(1, int(0.95 * cfg.num_workers)),
+                                 flops_per_worker=grad_flops, comm_units=1.0)
+        else:
+            fin = jnp.ones((cfg.num_workers,), bool)
+            if clock is not None:
+                if cfg.policy == "gcode":
+                    gradient_coding_phase(clock, k1, cfg.num_workers,
+                                          cfg.gcode_redundancy,
+                                          flops_per_worker=grad_flops)
+                else:
+                    clock.phase(k1, cfg.num_workers, policy="wait_all",
+                                flops_per_worker=grad_flops, comm_units=1.0)
+        g_locals = lg(xs, ys, wts, w)
+        finf = fin.astype(jnp.float32)
+        weights = finf * shard_sizes
+        g = (weights[:, None] * g_locals).sum(0) / jnp.maximum(
+            weights.sum(), 1.0)
+        # masked_value includes the regularizer per shard; averaging keeps it.
+
+        # --- stage 2: local second-order directions -----------------------
+        if cfg.policy == "ignore" and clock is not None:
+            _, fin2 = clock.phase(k2, cfg.num_workers, policy="k_of_n",
+                                  k=max(1, int(0.95 * cfg.num_workers)),
+                                  flops_per_worker=newton_flops,
+                                  comm_units=1.0)
+        else:
+            fin2 = jnp.ones((cfg.num_workers,), bool)
+            if clock is not None:
+                clock.phase(k2, cfg.num_workers, policy="wait_all",
+                            flops_per_worker=newton_flops, comm_units=1.0)
+        p_locals = ln(xs, ys, wts, w, g)
+        fin2f = fin2.astype(jnp.float32)
+        p = -(fin2f[:, None] * p_locals).sum(0) / jnp.maximum(fin2f.sum(), 1.0)
+
+        step = 1.0
+        if not cfg.unit_step:
+            from repro.core import linesearch
+            step = float(linesearch.linesearch_strongly_convex(
+                objective, data, w, p, g))
+            if clock is not None:
+                clock.phase(k3, cfg.num_workers, policy="wait_all",
+                            flops_per_worker=grad_flops * 6, comm_units=0.3)
+        w = w + step * p
+
+        hist["iter"].append(t)
+        hist["fval"].append(float(val_fn(w, data)))
+        hist["gnorm"].append(float(jnp.linalg.norm(grad_fn(w, data))))
+        hist["step"].append(float(step))
+        hist["time"].append(clock.time if clock is not None else float(t + 1))
+        if cfg.track_test_error and data.x_test is not None:
+            hist["test_error"].append(
+                float(objective.error(w, data.x_test, data.y_test)))
+        else:
+            hist["test_error"].append(float("nan"))
+    hist["w"] = w
+    return hist

@@ -1,0 +1,2 @@
+from repro.training.trainer import Trainer, TrainerConfig, SimulatedFailure
+from repro.training.osn_head import extract_features, train_osn_head

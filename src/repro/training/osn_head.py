@@ -1,0 +1,53 @@
+"""OverSketched Newton as a first-class framework feature: train a softmax
+readout head / linear probe on frozen backbone features with the paper's
+algorithm (its Sec. 4.2 workload at LM scale).
+
+This is the direct application of the paper's technique to the assigned
+architecture pool (DESIGN.md §4): the probe objective is (weakly) convex, so
+Thms 3.1/3.3 apply, and the Hessian square root has exactly the
+matrix-product structure OverSketch accelerates.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Dataset, NewtonConfig, OverSketchConfig,
+                        SoftmaxRegression, oversketched_newton)
+from repro.core.straggler import StragglerModel
+from repro.models.registry import ModelBundle
+from repro.models import transformer
+
+
+def extract_features(bundle: ModelBundle, params, tokens: jax.Array,
+                     extra=None) -> jax.Array:
+    """Frozen-backbone features: mean-pooled final hidden states (B, d)."""
+    h, _ = transformer.forward_hidden(bundle.cfg, params, tokens, extra,
+                                      remat=False)
+    return h.mean(axis=1).astype(jnp.float32)
+
+
+def train_osn_head(features: jax.Array, labels_onehot: jax.Array, *,
+                   num_classes: int, sketch_dim: Optional[int] = None,
+                   block_size: int = 128, iters: int = 8,
+                   model: Optional[StragglerModel] = StragglerModel(),
+                   seed: int = 0) -> Tuple[jax.Array, dict]:
+    """Fit W (K, d) on (B, d) features with OverSketched Newton.
+
+    Returns (w_flat, history).  Weakly-convex path (unregularized softmax):
+    Newton-MR update + Eq. (6) line search, per the paper.
+    """
+    b, d = features.shape
+    k = num_classes
+    sketch_dim = sketch_dim or max(block_size,
+                                   block_size * (-(-4 * d * k // block_size)))
+    obj = SoftmaxRegression(num_classes=k)
+    data = Dataset(x=features, y=labels_onehot)
+    cfg = NewtonConfig(
+        iters=iters, solver="pinv",
+        sketch=OverSketchConfig(sketch_dim, block_size, 0.25),
+        coded_block_rows=min(256, max(32, b // 8)), seed=seed)
+    res = oversketched_newton(obj, data, jnp.zeros(k * d), cfg, model=model)
+    return res.w, res.history

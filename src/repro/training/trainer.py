@@ -1,0 +1,232 @@
+"""Distributed trainer with the production-run survival kit:
+
+  * pjit train step (TP + FSDP + sequence-parallel activations per
+    `distributed.sharding`), AdamW, global-norm clipping;
+  * checkpoint/restart: atomic async checkpoints every K steps, automatic
+    restore-from-latest, deterministic per-step data (replay-safe);
+  * simulated chip failure -> restart loop (`run_with_restarts`), including
+    ELASTIC restarts onto a smaller mesh (state is resharded on restore);
+  * optional straggler-resilient data-parallel gradients: shard_map over the
+    data axis with the paper-derived `resilient_psum` (k-of-n mean instead of
+    wait-all) — OverSketch's termination rule applied to DP training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.core.straggler import StragglerModel
+from repro.data.pipeline import TokenPipeline
+from repro.distributed import (activation_constraint, batch_shardings,
+                               opt_state_shardings, param_shardings,
+                               resilient_psum)
+from repro.models.registry import ModelBundle, ShapeSpec
+from repro.optim import adamw
+
+Pytree = Any
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected chip/worker failure (fault-tolerance tests)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    arch: str
+    smoke: bool = True
+    steps: int = 50
+    batch: int = 8
+    seq: int = 128
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 20
+    log_every: int = 10
+    seed: int = 0
+    lr: float = 3e-4
+    warmup_steps: int = 20
+    resilient_grads: bool = False
+    grad_compression: bool = False   # int8 wire format for the DP reduction
+    straggler: Optional[StragglerModel] = None
+    seq_shard_activations: bool = True
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        from repro.configs import smoke_config
+        from repro.models.registry import get_config
+        mcfg = smoke_config(cfg.arch) if cfg.smoke else get_config(cfg.arch)
+        self.bundle = ModelBundle(mcfg)
+        self.mcfg = mcfg
+        self.ocfg = adamw.AdamWConfig(lr=cfg.lr, warmup_steps=cfg.warmup_steps,
+                                      total_steps=cfg.steps)
+        self.ckpt = CheckpointManager(cfg.ckpt_dir) if cfg.ckpt_dir else None
+
+        self.p_shard = param_shardings(self.bundle, mesh)
+        shape = ShapeSpec("train", "train", cfg.seq, cfg.batch)
+        ins = self.bundle.input_specs(shape, reduced=True)
+        self.b_shard = batch_shardings(self.bundle, mesh, ins)
+        extra = {k: v for k, v in ins.items()
+                 if k in ("frame_embeds", "patch_embeds")}
+        self.pipeline = TokenPipeline(
+            mcfg.vocab_size, cfg.batch,
+            ins["tokens"].shape[1], seed=cfg.seed,
+            sharding=self.b_shard, extra_specs=extra)
+        self._build_step()
+
+    # ------------------------------------------------------------ stepping --
+    def _build_step(self):
+        cfg, mesh = self.cfg, self.mesh
+        constrain = activation_constraint(
+            mesh, cfg.seq_shard_activations) if mesh is not None else None
+        opt_shard = opt_state_shardings(self.p_shard, None)
+
+        def loss_fn(params, batch):
+            return self.bundle.loss(params, batch, constrain)
+
+        if not cfg.resilient_grads:
+            def step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+                new_params, new_opt = adamw.apply(self.ocfg, grads,
+                                                  opt_state, params)
+                gn = adamw.global_norm(grads)
+                return new_params, new_opt, {"loss": loss, "grad_norm": gn}
+
+            self.step_fn = jax.jit(
+                step,
+                in_shardings=(self.p_shard, opt_shard, self.b_shard),
+                out_shardings=(self.p_shard, opt_shard, None))
+        else:
+            # k-of-n resilient DP gradients: params replicated, batch sharded
+            # over the data axis; each shard is a "worker" whose contribution
+            # can miss the deadline (live=0) — the paper's Alg. 2 termination
+            # rule as a gradient all-reduce.
+            data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            repl = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                self.p_shard)
+
+            from repro.distributed.collectives import \
+                compressed_resilient_psum
+            reduce_fn = compressed_resilient_psum if cfg.grad_compression \
+                else resilient_psum
+
+            def shard_grads(params, batch, live):
+                def local(params_l, batch_l, live_l):
+                    # no sharding constraints inside shard_map: the mesh
+                    # axes are manual here
+                    loss_l, grads_l = jax.value_and_grad(
+                        lambda p, b: self.bundle.loss(p, b, None))(
+                            params_l, batch_l)
+                    grads_r = reduce_fn(grads_l, live_l[0], data_axes[-1])
+                    loss_r = resilient_psum({"l": loss_l}, live_l[0],
+                                            data_axes[-1])["l"]
+                    return grads_r, loss_r
+
+                batch_specs = jax.tree.map(lambda s: s.spec, self.b_shard)
+                return jax.shard_map(
+                    local, mesh=mesh,
+                    in_specs=(P(), batch_specs, P(data_axes)),
+                    out_specs=(P(), P()), check_vma=False)(
+                        params, batch, live)
+
+            def step(params, opt_state, batch, live):
+                grads, loss = shard_grads(params, batch, live)
+                new_params, new_opt = adamw.apply(self.ocfg, grads,
+                                                  opt_state, params)
+                gn = adamw.global_norm(grads)
+                return new_params, new_opt, {"loss": loss, "grad_norm": gn}
+
+            self.step_fn = jax.jit(step)
+            self.p_shard = repl
+            self._data_axes = data_axes
+
+    def init_state(self) -> Tuple[Pytree, Any]:
+        with self.mesh:
+            params = jax.jit(
+                self.bundle.init,
+                out_shardings=self.p_shard)(jax.random.PRNGKey(self.cfg.seed))
+            opt_state = adamw.init(params)
+        return params, opt_state
+
+    # -------------------------------------------------------------- running --
+    def run(self, params, opt_state, start_step: int = 0,
+            fail_at: Optional[int] = None) -> Tuple[Pytree, Any, List[Dict]]:
+        cfg = self.cfg
+        history: List[Dict] = []
+        key = jax.random.PRNGKey(cfg.seed + 17)
+        n_workers = 1
+        if cfg.resilient_grads:
+            n_workers = 1
+            for a in self._data_axes:
+                n_workers *= self.mesh.shape[a]
+
+        with self.mesh:
+            for step in range(start_step, cfg.steps):
+                if fail_at is not None and step == fail_at:
+                    raise SimulatedFailure(f"chip lost at step {step}")
+                batch = self.pipeline.device_batch(step)
+                t0 = time.perf_counter()
+                if cfg.resilient_grads:
+                    key, k = jax.random.split(key)
+                    if cfg.straggler is not None:
+                        times = cfg.straggler.sample_times(k, n_workers)
+                        kk = max(1, int(0.9 * n_workers))
+                        live = (times <= jnp.sort(times)[kk - 1]).astype(
+                            jnp.float32)
+                    else:
+                        live = jnp.ones((n_workers,), jnp.float32)
+                    params, opt_state, metrics = self.step_fn(
+                        params, opt_state, batch, live)
+                else:
+                    params, opt_state, metrics = self.step_fn(
+                        params, opt_state, batch)
+                dt = time.perf_counter() - t0
+                rec = {"step": step, "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "step_time": dt}
+                history.append(rec)
+                if self.ckpt and (step + 1) % cfg.ckpt_every == 0:
+                    self.ckpt.async_save(step + 1, {
+                        "params": params, "opt": opt_state})
+        if self.ckpt:
+            self.ckpt.wait()
+        return params, opt_state, history
+
+    def run_with_restarts(self, fail_at: Optional[int] = None,
+                          max_restarts: int = 3) -> List[Dict]:
+        """Checkpoint-restart driver: a failure resumes from the latest
+        checkpoint (or step 0), replaying deterministic data."""
+        params, opt_state = self.init_state()
+        all_hist: List[Dict] = []
+        start, restarts = 0, 0
+        while True:
+            try:
+                params, opt_state, hist = self.run(params, opt_state, start,
+                                                   fail_at=fail_at)
+                all_hist.extend(hist)
+                return all_hist
+            except SimulatedFailure:
+                restarts += 1
+                if restarts > max_restarts:
+                    raise
+                fail_at = None   # don't re-fail
+                latest = self.ckpt.latest_step() if self.ckpt else None
+                if latest is not None:
+                    state = self.ckpt.restore(
+                        latest,
+                        {"params": jax.eval_shape(lambda: params),
+                         "opt": jax.eval_shape(lambda: opt_state)},
+                        {"params": self.p_shard,
+                         "opt": opt_state_shardings(self.p_shard, None)})
+                    params, opt_state = state["params"], state["opt"]
+                    start = latest
+                else:
+                    params, opt_state = self.init_state()
+                    start = 0

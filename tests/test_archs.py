@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests (reduced configs of the same family):
+one train step on CPU asserting output shapes + no NaNs, plus the strong
+serving invariant  full-forward(t) == prefill(t-1) + decode  per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, smoke_config
+from repro.models import encdec, transformer
+from repro.models.registry import ModelBundle
+from repro.optim import adamw
+
+DECODE_TOL = 0.2   # bf16 logit noise at scale ~3.5
+
+
+def _batch(cfg, bsz=2, seq=24, seed=0):
+    rs = np.random.RandomState(seed)
+    toks = jnp.asarray(rs.randint(1, cfg.vocab_size - 1, (bsz, seq)))
+    batch = {"tokens": toks, "labels": toks}
+    extra = None
+    if cfg.family == "encdec":
+        extra = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                  (bsz, cfg.encoder_seq, cfg.d_model),
+                                  cfg.compute_dtype)
+        batch["frame_embeds"] = extra
+    elif cfg.frontend == "patch_stub":
+        extra = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                  (bsz, cfg.num_patches, cfg.d_model),
+                                  cfg.compute_dtype)
+        batch["patch_embeds"] = extra
+        batch["labels"] = jnp.asarray(rs.randint(
+            1, cfg.vocab_size - 1, (bsz, seq + cfg.num_patches)))
+    return batch, extra
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_smoke(arch):
+    """Reduced config, one forward+backward+AdamW step: shapes + no NaNs."""
+    cfg = smoke_config(arch)
+    bundle = ModelBundle(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    batch, _ = _batch(cfg)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: bundle.loss(p, batch))(params)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    gn = jnp.sqrt(sum(jnp.vdot(g, g).real for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gn)) and float(gn) > 0, f"{arch}: bad grads"
+
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = adamw.init(params)
+    new_params, _ = adamw.apply(ocfg, grads, state, params)
+    # shapes preserved, values changed, still finite
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    loss2 = bundle.loss(new_params, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_forward(arch):
+    """prefill(S-1 tokens) + decode(1) must reproduce full forward's last
+    logits (the serving-correctness invariant)."""
+    cfg = smoke_config(arch)
+    bundle = ModelBundle(cfg)
+    params = bundle.init(jax.random.PRNGKey(1))
+    seq = 24
+    batch, extra = _batch(cfg, seq=seq, seed=2)
+    toks = batch["tokens"]
+
+    if cfg.family == "encdec":
+        logits_full, _ = encdec.forward(cfg, params, toks, extra)
+    else:
+        logits_full, _ = transformer.forward(cfg, params, toks, extra,
+                                             remat=False)
+
+    cache = bundle.init_cache(2, 64)
+    _, cache = bundle.prefill(params, toks[:, :seq - 1], cache, extra)
+    lg_dec, cache2 = bundle.decode(params, cache, toks[:, seq - 1])
+    expect_pos = seq + (cfg.num_patches if cfg.frontend == "patch_stub" else 0)
+    assert int(cache2["pos"]) == expect_pos
+    ref = logits_full[:, -1].astype(jnp.float32)
+    err = float(jnp.abs(lg_dec.astype(jnp.float32) - ref).max())
+    assert err < DECODE_TOL, f"{arch}: decode drift {err}"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_multi_token_decode_stays_finite(arch):
+    cfg = smoke_config(arch)
+    bundle = ModelBundle(cfg)
+    params = bundle.init(jax.random.PRNGKey(3))
+    batch, extra = _batch(cfg, seq=8, seed=4)
+    cache = bundle.init_cache(2, 64)
+    _, cache = bundle.prefill(params, batch["tokens"], cache, extra)
+    tok = jnp.zeros((2,), jnp.int32)
+    dec = jax.jit(bundle.decode)
+    for _ in range(4):
+        logits, cache = dec(params, cache, tok)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def test_full_configs_match_assignment():
+    """Exact dims from the assignment table."""
+    from repro.models.registry import get_config
+    c = get_config("qwen3-32b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (64, 5120, 64, 8, 25600, 151936)
+    c = get_config("qwen3-moe-235b-a22b")
+    assert (c.num_layers, c.d_model, c.num_experts, c.experts_per_token) == \
+        (94, 4096, 128, 8)
+    c = get_config("gemma3-27b")
+    assert (c.num_layers, c.d_model, c.d_ff, c.vocab_size,
+            c.local_global_pattern) == (62, 5376, 21504, 262144, 5)
+    c = get_config("recurrentgemma-2b")
+    assert (c.num_layers, c.d_model, c.attn_every) == (26, 2560, 3)
+    c = get_config("mamba2-780m")
+    assert (c.num_layers, c.d_model, c.ssm_state) == (48, 1536, 128)
+    c = get_config("whisper-large-v3")
+    assert (c.num_layers, c.encoder_layers, c.d_model, c.vocab_size) == \
+        (32, 32, 1280, 51866)
+    c = get_config("llava-next-34b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.vocab_size) == \
+        (60, 7168, 56, 64000)
+    c = get_config("qwen2-7b")
+    assert c.qkv_bias and (c.num_layers, c.d_model) == (28, 3584)
+    c = get_config("qwen3-4b")
+    assert c.qk_norm and (c.num_layers, c.d_ff) == (36, 9728)
+    c = get_config("qwen3-moe-30b-a3b")
+    assert (c.num_layers, c.d_model, c.d_ff) == (48, 2048, 768)
+
+
+def test_param_counts_plausible():
+    """Full-config parameter counts are in the right ballpark (catches
+    transposed dims / missing factors).  Counted from specs, no allocation."""
+    from repro.models.registry import get_bundle
+    expect = {
+        "qwen3-32b": (30e9, 36e9),
+        "qwen3-4b": (3.5e9, 5e9),
+        "qwen2-7b": (7e9, 8.5e9),
+        "gemma3-27b": (26e9, 30e9),
+        "qwen3-moe-235b-a22b": (220e9, 250e9),
+        "qwen3-moe-30b-a3b": (28e9, 33e9),
+        "mamba2-780m": (0.7e9, 0.9e9),
+        "recurrentgemma-2b": (2.3e9, 3.3e9),
+        "whisper-large-v3": (1.4e9, 1.9e9),
+        "llava-next-34b": (33e9, 36e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_bundle(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params not in [{lo/1e9}, {hi/1e9}]B"

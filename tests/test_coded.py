@@ -1,0 +1,127 @@
+"""2-D product code: encode/decode round trips, peeling under erasures,
+hypothesis property sweep over random decodable patterns."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coded as cd
+
+
+def _setup(key, rows=500, cols=33, block=64):
+    m = jax.random.normal(key, (rows, cols))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (cols,))
+    code = cd.make_code(rows, block)
+    enc = cd.encode_2d(m, code)
+    return m, v, code, enc
+
+
+def test_encode_shapes():
+    key = jax.random.PRNGKey(0)
+    m, v, code, enc = _setup(key)
+    g = code.grid
+    assert enc.shape == (g + 1, g + 1, code.block_rows, m.shape[1])
+    # parity relations
+    np.testing.assert_allclose(np.asarray(enc[:-1, -1]),
+                               np.asarray(enc[:-1, :-1].sum(axis=1)),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(enc[-1]),
+                               np.asarray(enc[:-1].sum(axis=0)),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_no_erasure_roundtrip():
+    key = jax.random.PRNGKey(1)
+    m, v, code, enc = _setup(key)
+    y, ok = cd.coded_matvec(enc, v, code, m.shape[0])
+    assert bool(ok)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(m @ v),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_single_erasure_per_line_decodes():
+    key = jax.random.PRNGKey(2)
+    m, v, code, enc = _setup(key)
+    g = code.grid
+    erased = jnp.zeros((g + 1, g + 1), bool)
+    for i in range(g + 1):           # one erasure per row, distinct columns
+        erased = erased.at[i, (i * 2) % (g + 1)].set(True)
+    y, ok = cd.coded_matvec(enc, v, code, m.shape[0], erased)
+    assert bool(ok)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(m @ v),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_multi_round_peeling():
+    """A pattern needing >1 peel round (two erasures in a row, resolvable via
+    columns first)."""
+    key = jax.random.PRNGKey(3)
+    m, v, code, enc = _setup(key)
+    erased = jnp.zeros((code.grid + 1, code.grid + 1), bool)
+    erased = erased.at[0, 0].set(True).at[0, 1].set(True)
+    y, ok = cd.coded_matvec(enc, v, code, m.shape[0], erased)
+    assert bool(ok)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(m @ v),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_undecodable_pattern_flags_failure():
+    """A 2x2 erased square is a stopping set: decode must report failure."""
+    key = jax.random.PRNGKey(4)
+    m, v, code, enc = _setup(key)
+    erased = jnp.zeros((code.grid + 1, code.grid + 1), bool)
+    erased = erased.at[0, 0].set(True).at[0, 1].set(True)
+    erased = erased.at[1, 0].set(True).at[1, 1].set(True)
+    _, ok = cd.coded_matvec(enc, v, code, m.shape[0], erased)
+    assert not bool(ok)
+
+
+def test_ragged_rows_padding():
+    """Row count not divisible by block size."""
+    key = jax.random.PRNGKey(5)
+    m, v, code, enc = _setup(key, rows=409, block=64)
+    y, ok = cd.coded_matvec(enc, v, code, 409)
+    assert bool(ok)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(m @ v),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n_erase=st.integers(0, 5))
+def test_random_erasures_property(seed, n_erase):
+    """Random erasure sets: if peeling reports success the answer is exact;
+    erasing entire rows' worth (> 2g+1) is not generated here."""
+    key = jax.random.PRNGKey(seed)
+    m, v, code, enc = _setup(key, rows=300, block=64)
+    g1 = code.grid + 1
+    idx = jax.random.choice(jax.random.fold_in(key, 2), g1 * g1,
+                            (n_erase,), replace=False)
+    erased = jnp.zeros((g1 * g1,), bool).at[idx].set(True).reshape(g1, g1)
+    y, ok = cd.coded_matvec(enc, v, code, 300, erased)
+    if bool(ok):
+        np.testing.assert_allclose(np.asarray(y), np.asarray(m @ v),
+                                   rtol=1e-3, atol=1e-3)
+    else:
+        # failure must only happen when some line has >= 2 erasures
+        row_counts = np.asarray(erased).sum(axis=1)
+        col_counts = np.asarray(erased).sum(axis=0)
+        assert (row_counts >= 2).any() and (col_counts >= 2).any()
+
+
+def test_distributed_matches_local():
+    mesh = jax.make_mesh((1,), ("workers",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    key = jax.random.PRNGKey(6)
+    m, v, code, enc = _setup(key, rows=256, block=64)
+    g1 = code.grid + 1
+    w = code.num_workers
+    erased = jnp.zeros((g1, g1), bool).at[1, 1].set(True)
+    y_local, ok_local = cd.coded_matvec(enc, v, code, 256, erased)
+    enc_flat = enc.reshape(w, code.block_rows, -1)
+    y_dist, ok_dist = cd.distributed_coded_matvec(
+        enc_flat, v, erased.reshape(-1), code, 256, mesh=mesh,
+        worker_axis="workers")
+    assert bool(ok_local) and bool(ok_dist)
+    np.testing.assert_allclose(np.asarray(y_local), np.asarray(y_dist),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,129 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis.
+
+All kernels run in interpret mode on CPU (the TPU-target validation path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------- count sketch
+@pytest.mark.parametrize("k,n,d,b", [
+    (1, 64, 32, 64),
+    (3, 300, 70, 128),
+    (5, 1000, 17, 256),     # ragged d
+    (2, 129, 130, 64),      # ragged both
+])
+def test_count_sketch_shapes(k, n, d, b):
+    key = jax.random.PRNGKey(k * 100 + n)
+    kh, ks, ka = jax.random.split(key, 3)
+    h = jax.random.randint(kh, (k, n), 0, b, dtype=jnp.int32)
+    sigma = jax.random.rademacher(ks, (k, n), dtype=jnp.float32)
+    a = jax.random.normal(ka, (n, d))
+    out = ops.count_sketch_apply(h, sigma, a, b)
+    expect = ref.count_sketch_apply(h, sigma, a, b)
+    assert out.shape == (k, b, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_count_sketch_dtypes(dtype):
+    key = jax.random.PRNGKey(7)
+    kh, ks, ka = jax.random.split(key, 3)
+    k, n, d, b = 2, 128, 64, 64
+    h = jax.random.randint(kh, (k, n), 0, b, dtype=jnp.int32)
+    sigma = jax.random.rademacher(ks, (k, n), dtype=jnp.float32)
+    a = jax.random.normal(ka, (n, d)).astype(dtype)
+    out = ops.count_sketch_apply(h, sigma, a, b)
+    expect = ref.count_sketch_apply(h, sigma, a.astype(jnp.float32), b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(8, 200),
+       d=st.integers(1, 100))
+def test_count_sketch_property(seed, n, d):
+    b = 64
+    key = jax.random.PRNGKey(seed)
+    kh, ks, ka = jax.random.split(key, 3)
+    h = jax.random.randint(kh, (2, n), 0, b, dtype=jnp.int32)
+    sigma = jax.random.rademacher(ks, (2, n), dtype=jnp.float32)
+    a = jax.random.normal(ka, (n, d))
+    out = ops.count_sketch_apply(h, sigma, a, b)
+    expect = ref.count_sketch_apply(h, sigma, a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ oversketch gram
+@pytest.mark.parametrize("k,b,d", [
+    (4, 64, 32),
+    (6, 128, 100),   # ragged d
+    (10, 256, 256),
+    (3, 65, 33),     # ragged b and d
+])
+def test_oversketch_gram_shapes(k, b, d):
+    key = jax.random.PRNGKey(k + b + d)
+    a_t = jax.random.normal(key, (k, b, d))
+    surv = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.8, (k,))
+    surv = surv.at[0].set(True)   # at least one survivor
+    out = ops.oversketch_gram(a_t, surv)
+    expect = ref.oversketch_gram(a_t, surv)
+    assert out.shape == (d, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_oversketch_gram_all_masked_is_safe():
+    a_t = jnp.ones((3, 64, 16))
+    out = ops.oversketch_gram(a_t, jnp.zeros((3,), bool))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ------------------------------------------------------------- coded matvec
+@pytest.mark.parametrize("w,b,s", [
+    (4, 64, 128),
+    (9, 32, 333),    # ragged s
+    (25, 64, 512),
+])
+def test_coded_matvec_shapes(w, b, s):
+    key = jax.random.PRNGKey(w + s)
+    enc = jax.random.normal(key, (w, b, s))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (s,))
+    erased = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.2, (w,))
+    out = ops.coded_block_matvec(enc, x, erased)
+    expect = ref.coded_block_matvec(enc, x, erased)
+    assert out.shape == (w, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------- end-to-end kernels inside newton
+def test_newton_with_kernels_matches_reference_path():
+    from repro.core import (Dataset, LogisticRegression, NewtonConfig,
+                            OverSketchConfig, oversketched_newton)
+    key = jax.random.PRNGKey(11)
+    n, d = 600, 20
+    kx, kw, ky = jax.random.split(key, 3)
+    x = jax.random.uniform(kx, (n, d), minval=-1, maxval=1)
+    wstar = jax.random.normal(kw, (d,))
+    y = jnp.where(jax.random.uniform(ky, (n,)) <
+                  jax.nn.sigmoid(x @ wstar), 1.0, -1.0)
+    data = Dataset(x=x, y=y)
+    obj = LogisticRegression(lam=1e-4)
+    base = dict(iters=4, sketch=OverSketchConfig(256, 64, 0.25),
+                coded_block_rows=64)
+    r_ref = oversketched_newton(obj, data, jnp.zeros(d),
+                                NewtonConfig(**base), model=None)
+    r_ker = oversketched_newton(obj, data, jnp.zeros(d),
+                                NewtonConfig(use_kernels=True, **base),
+                                model=None)
+    # Same sketch seed => identical Hessians => identical trajectories.
+    np.testing.assert_allclose(np.asarray(r_ref.w), np.asarray(r_ker.w),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,133 @@
+"""Objective correctness: gradients vs jax.grad, Hessian square roots vs
+jax.hessian, matvec-hook equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import objectives as ob
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _logistic_data(key, n=200, d=12):
+    kx, kw, ky = jax.random.split(key, 3)
+    x = jax.random.uniform(kx, (n, d), minval=-1, maxval=1)
+    w = jax.random.normal(kw, (d,))
+    y = jnp.where(jax.random.uniform(ky, (n,)) < jax.nn.sigmoid(x @ w),
+                  1.0, -1.0)
+    return ob.Dataset(x=x, y=y), w
+
+
+def _softmax_data(key, n=150, d=8, k=4):
+    kx, kw, ky = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n, d))
+    w = jax.random.normal(kw, (k, d))
+    y = jax.nn.one_hot(jax.random.categorical(ky, x @ w.T), k)
+    return ob.Dataset(x=x, y=y), w.reshape(-1)
+
+
+@pytest.mark.parametrize("factory,obj", [
+    (_logistic_data, ob.LogisticRegression(lam=1e-3)),
+    (_softmax_data, ob.SoftmaxRegression(num_classes=4)),
+])
+def test_gradient_matches_autodiff(factory, obj):
+    data, w0 = factory(jax.random.PRNGKey(0))
+    w = 0.3 * w0
+    g = obj.gradient(w, data)
+    g_auto = jax.grad(lambda ww: obj.value(ww, data))(w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_auto),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("factory,obj", [
+    (_logistic_data, ob.LogisticRegression(lam=1e-3)),
+    (_softmax_data, ob.SoftmaxRegression(num_classes=4)),
+])
+def test_gradient_via_hook_matches_direct(factory, obj):
+    data, w0 = factory(jax.random.PRNGKey(1))
+    w = 0.1 * w0
+    g_direct = obj.gradient(w, data)
+    g_hook = obj.gradient_via(w, data)   # default plain matvec hook
+    np.testing.assert_allclose(np.asarray(g_direct), np.asarray(g_hook),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_logistic_hess_sqrt():
+    data, w0 = _logistic_data(jax.random.PRNGKey(2))
+    obj = ob.LogisticRegression(lam=1e-3)
+    w = 0.2 * w0
+    a = obj.hess_sqrt(w, data)
+    h = a.T @ a + obj.hess_reg * jnp.eye(a.shape[1])
+    h_auto = jax.hessian(lambda ww: obj.value(ww, data))(w)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_auto),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_softmax_hess_sqrt():
+    """A^T A must equal the dK x dK softmax Hessian (paper Eq. 12 layout)."""
+    data, w0 = _softmax_data(jax.random.PRNGKey(3), n=60, d=5, k=3)
+    obj = ob.SoftmaxRegression(num_classes=3)
+    w = 0.2 * w0
+    a = obj.hess_sqrt(w, data)
+    h = a.T @ a
+    h_auto = jax.hessian(lambda ww: obj.value(ww, data))(w)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_auto),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_ridge_hessian_exact():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (100, 7))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (100,))
+    data = ob.Dataset(x=x, y=y)
+    obj = ob.RidgeRegression(lam=0.1)
+    w = jnp.zeros(7)
+    a = obj.hess_sqrt(w, data)
+    h = a.T @ a + obj.hess_reg * jnp.eye(7)
+    h_auto = jax.hessian(lambda ww: obj.value(ww, data))(w)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_auto),
+                               rtol=1e-4, atol=1e-5)
+    g = obj.gradient(w, data)
+    g_auto = jax.grad(lambda ww: obj.value(ww, data))(w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_auto),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_lp_ipm_gradient_and_hessian():
+    key = jax.random.PRNGKey(5)
+    n, m = 80, 6
+    a_mat = jax.random.normal(key, (n, m))
+    x0 = jnp.zeros(m)
+    b = a_mat @ x0 + 1.0 + jax.random.uniform(jax.random.fold_in(key, 1),
+                                              (n,))
+    c = jax.random.normal(jax.random.fold_in(key, 2), (m,))
+    data = ob.Dataset(x=a_mat, y=b)
+    obj = ob.LinearProgramIPM(c=c, tau=5.0)
+    g = obj.gradient(x0, data)
+    g_auto = jax.grad(lambda ww: obj.value(ww, data))(x0)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_auto),
+                               rtol=1e-3, atol=1e-4)
+    asq = obj.hess_sqrt(x0, data)
+    h_auto = jax.hessian(lambda ww: obj.value(ww, data))(x0)
+    np.testing.assert_allclose(np.asarray(asq.T @ asq), np.asarray(h_auto),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_lasso_dual_gradient_and_hessian():
+    key = jax.random.PRNGKey(6)
+    n, d = 30, 50
+    x = jax.random.normal(key, (n, d)) * 0.1
+    y = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    data = ob.Dataset(x=x, y=y)
+    obj = ob.LassoDualIPM(lam=2.0, tau=3.0)
+    z = jnp.zeros(n)
+    g = obj.gradient(z, data)
+    g_auto = jax.grad(lambda zz: obj.value(zz, data))(z)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_auto),
+                               rtol=1e-3, atol=1e-4)
+    asq = obj.hess_sqrt(z, data)
+    h = asq.T @ asq + obj.hess_reg * jnp.eye(n)
+    h_auto = jax.hessian(lambda zz: obj.value(zz, data))(z)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_auto),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,133 @@
+"""Baseline optimizers: convergence + straggler accounting + gradient-coding
+decodability + AdamW behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Dataset, LogisticRegression, StragglerModel
+from repro.optim import (FirstOrderConfig, GiantConfig, adamw, decode_weights,
+                         exact_newton, first_order, giant)
+
+
+@pytest.fixture(scope="module")
+def logistic_problem():
+    key = jax.random.PRNGKey(0)
+    n, d = 1200, 20
+    kx, kw, ky = jax.random.split(key, 3)
+    x = jax.random.uniform(kx, (n, d), minval=-1, maxval=1)
+    wstar = jax.random.normal(kw, (d,))
+    y = jnp.where(jax.random.uniform(ky, (n,)) < jax.nn.sigmoid(x @ wstar),
+                  1.0, -1.0)
+    return Dataset(x=x, y=y), LogisticRegression(lam=1e-4), d
+
+
+def test_gd_decreases(logistic_problem):
+    data, obj, d = logistic_problem
+    h = first_order(obj, data, jnp.zeros(d),
+                    FirstOrderConfig(iters=15, method="gd"))
+    assert h["fval"][-1] < h["fval"][0]
+
+
+def test_nag_beats_gd_in_iterations(logistic_problem):
+    data, obj, d = logistic_problem
+    gd = first_order(obj, data, jnp.zeros(d),
+                     FirstOrderConfig(iters=25, method="gd"), model=None)
+    nag = first_order(obj, data, jnp.zeros(d),
+                      FirstOrderConfig(iters=25, method="nag"), model=None)
+    assert nag["fval"][-1] <= gd["fval"][-1] + 1e-3
+
+
+def test_giant_converges_fast(logistic_problem):
+    data, obj, d = logistic_problem
+    h = giant(obj, data, jnp.zeros(d), GiantConfig(iters=5, num_workers=12),
+              model=None)
+    assert h["gnorm"][-1] < 5e-2
+    assert h["fval"][-1] < h["fval"][0]
+
+
+def test_giant_policies_time_ordering(logistic_problem):
+    """With a heavy tail, ignore-stragglers < wait-all in simulated time
+    (paper Fig. 6/7 observation)."""
+    data, obj, d = logistic_problem
+    model = StragglerModel(p_tail=0.2, tail_hi=4.0)
+    t_ign = giant(obj, data, jnp.zeros(d),
+                  GiantConfig(iters=4, num_workers=24, policy="ignore"),
+                  model=model)["time"][-1]
+    t_wait = giant(obj, data, jnp.zeros(d),
+                   GiantConfig(iters=4, num_workers=24, policy="wait_all"),
+                   model=model)["time"][-1]
+    assert t_ign < t_wait
+
+
+def test_gcode_charges_replication_cost(logistic_problem):
+    """Gradient coding does r-fold work/comm — slower per phase than ignore
+    (the paper's EPSILON observation)."""
+    data, obj, d = logistic_problem
+    model = StragglerModel(p_tail=0.02)
+    t_gc = first_order(obj, data, jnp.zeros(d),
+                       FirstOrderConfig(iters=4, policy="gcode",
+                                        gcode_redundancy=3,
+                                        backtracking=False), model=model)
+    t_ig = first_order(obj, data, jnp.zeros(d),
+                       FirstOrderConfig(iters=4, policy="ignore",
+                                        backtracking=False), model=model)
+    assert t_gc["time"][-1] > t_ig["time"][-1]
+
+
+def test_exact_newton_reaches_optimum(logistic_problem):
+    data, obj, d = logistic_problem
+    h = exact_newton(obj, data, jnp.zeros(d), iters=7, model=None)
+    assert h["gnorm"][-1] < 1e-4
+
+
+def test_gradient_coding_decode_weights():
+    """Any W-(r-1) finished workers admit exact-decode weights."""
+    w, r = 12, 3
+    finished = np.ones(w, bool)
+    finished[[2, 7]] = False                      # r-1 = 2 stragglers
+    wts = decode_weights(finished, w, r)
+    assert wts is not None
+    from repro.optim import assignment
+    b = np.zeros((w, w))
+    for i in range(w):
+        b[i, assignment(w, r)[i]] = 1
+    np.testing.assert_allclose(b.T @ wts, np.ones(w), atol=1e-6)
+    assert np.allclose(wts[~finished], 0)
+
+
+def test_gradient_coding_undecodable_detected():
+    w, r = 8, 2
+    finished = np.ones(w, bool)
+    finished[[0, 1]] = False                      # adjacent pair, r-1=1 only
+    assert decode_weights(finished, w, r) is None
+
+
+def test_adamw_reduces_loss():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (256, 10))
+    wstar = jax.random.normal(jax.random.fold_in(key, 1), (10,))
+    y = x @ wstar
+    params = {"w": jnp.zeros(10)}
+    cfg = adamw.AdamWConfig(lr=5e-2, warmup_steps=5, total_steps=200,
+                            weight_decay=0.0)
+    state = adamw.init(params)
+
+    def loss(p):
+        r = x @ p["w"] - y
+        return 0.5 * jnp.mean(r * r)
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = adamw.apply(cfg, g, state, params)
+    assert float(loss(params)) < 0.01 * l0
+
+
+def test_adamw_schedule_shape():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.1)
+    lrs = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9]                    # warmup
+    assert lrs[50] > lrs[99]                  # decay
+    assert lrs[99] >= 0.099                   # floor

@@ -1,0 +1,113 @@
+"""OverSketch properties: Lemma 6.1 spectral bounds (statistically),
+unbiasedness, straggler-drop consistency, chunked streaming equality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sketch as sk
+
+
+def _gram_err(key, n, d, cfg, drop=0):
+    a = jax.random.normal(key, (n, d)) / np.sqrt(n)
+    cs = sk.sample_countsketch(jax.random.fold_in(key, 1), n, cfg)
+    at = sk.apply_sketch(cs, a)
+    mask = jnp.arange(cfg.total_blocks) >= drop
+    h = sk.sketched_gram(at, mask)
+    h_true = a.T @ a
+    return float(jnp.linalg.norm(h - h_true, 2) / jnp.linalg.norm(h_true, 2))
+
+
+def test_config_accounting():
+    cfg = sk.OverSketchConfig(sketch_dim=2048, block_size=256,
+                              straggler_tolerance=0.25)
+    assert cfg.num_blocks == 8
+    assert cfg.num_redundant == 2
+    assert cfg.total_blocks == 10
+    assert cfg.total_dim == 2560
+
+
+def test_config_divisibility():
+    with pytest.raises(ValueError):
+        sk.OverSketchConfig(sketch_dim=1000, block_size=256)
+
+
+def test_spectral_approximation_improves_with_sketch_dim():
+    """Larger m => smaller eps (Thm 3.1 sketch-dim scaling)."""
+    key = jax.random.PRNGKey(0)
+    errs = []
+    for m, b in [(512, 64), (2048, 256), (8192, 1024)]:
+        cfg = sk.OverSketchConfig(m, b, 0.25)
+        errs.append(_gram_err(key, 600, 20, cfg))
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 0.12
+
+
+def test_straggler_drop_keeps_accuracy():
+    """Dropping <= e blocks with rescale stays comparably accurate."""
+    key = jax.random.PRNGKey(1)
+    cfg = sk.OverSketchConfig(2048, 256, 0.25)
+    full = _gram_err(key, 500, 25, cfg, drop=0)
+    dropped = _gram_err(key, 500, 25, cfg, drop=cfg.num_redundant)
+    assert dropped < 3 * full + 0.1
+
+
+def test_unbiasedness():
+    """E[S_i S_i^T] = I: the average of many independent block grams -> A^T A."""
+    key = jax.random.PRNGKey(2)
+    n, d = 200, 10
+    a = jax.random.normal(key, (n, d)) / np.sqrt(n)
+    cfg = sk.OverSketchConfig(sketch_dim=64 * 64, block_size=64,
+                              straggler_tolerance=0.0)
+    cs = sk.sample_countsketch(jax.random.fold_in(key, 3), n, cfg)
+    h = sk.sketched_gram(sk.apply_sketch(cs, a))
+    h_true = a.T @ a
+    assert float(jnp.linalg.norm(h - h_true) / jnp.linalg.norm(h_true)) < 0.2
+
+
+def test_eigenvalue_sandwich():
+    """Lemma 6.1: (1-eps) lam_min <= lam(H_hat) <= (1+eps) lam_max, for a
+    moderate eps at this sketch size."""
+    key = jax.random.PRNGKey(3)
+    n, d = 800, 12
+    a = jax.random.normal(key, (n, d)) / np.sqrt(n)
+    cfg = sk.OverSketchConfig(4096, 512, 0.25)
+    h = sk.oversketched_gram(jax.random.fold_in(key, 9), a, cfg)
+    ev_true = jnp.linalg.eigvalsh(a.T @ a)
+    ev_hat = jnp.linalg.eigvalsh(h)
+    eps = 0.5
+    assert ev_hat[0] >= (1 - eps) * ev_true[0] - 1e-6
+    assert ev_hat[-1] <= (1 + eps) * ev_true[-1] + 1e-6
+
+
+def test_chunked_apply_matches_full():
+    key = jax.random.PRNGKey(4)
+    n, d, chunks = 384, 17, 4
+    a = jax.random.normal(key, (n, d))
+    cfg = sk.OverSketchConfig(256, 64, 0.5)
+    cs = sk.sample_countsketch(jax.random.fold_in(key, 5), n, cfg)
+    full = sk.apply_sketch(cs, a)
+    chunk_rows = n // chunks
+    chunked = sk.apply_sketch_chunked(
+        cs, lambda c: jax.lax.dynamic_slice_in_dim(a, c * chunk_rows,
+                                                   chunk_rows), chunks,
+        chunk_rows, d)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_distributed_gram_matches_local():
+    """shard_map masked-psum path == single-device masked gram."""
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    key = jax.random.PRNGKey(5)
+    n, d = 256, 9
+    a = jax.random.normal(key, (n, d))
+    cfg = sk.OverSketchConfig(256, 64, 0.5)
+    cs = sk.sample_countsketch(jax.random.fold_in(key, 6), n, cfg)
+    surv = jnp.arange(cfg.total_blocks) != 2
+    local = sk.sketched_gram(sk.apply_sketch(cs, a), surv)
+    dist = sk.distributed_sketched_gram(a, cs, surv, mesh=mesh,
+                                        block_axis="model")
+    np.testing.assert_allclose(np.asarray(local), np.asarray(dist),
+                               rtol=1e-5, atol=1e-5)

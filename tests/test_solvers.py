@@ -1,0 +1,71 @@
+"""Solvers: CG vs direct, MINRES pseudo-inverse behaviour on singular PSD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solvers
+
+
+def _psd(key, d, rank=None):
+    a = jax.random.normal(key, (d, d))
+    h = a @ a.T / d
+    if rank is not None:
+        evals, evecs = jnp.linalg.eigh(h)
+        evals = evals.at[:d - rank].set(0.0)
+        h = (evecs * evals) @ evecs.T
+    return h
+
+
+def test_psd_solve():
+    key = jax.random.PRNGKey(0)
+    h = _psd(key, 12) + jnp.eye(12)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (12,))
+    p = solvers.psd_solve(h, g)
+    np.testing.assert_allclose(np.asarray(h @ p), np.asarray(g),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_cg_matches_direct():
+    key = jax.random.PRNGKey(1)
+    h = _psd(key, 20) + 0.5 * jnp.eye(20)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (20,))
+    p_cg = solvers.conjugate_gradient(lambda v: h @ v, g, jnp.zeros(20),
+                                      iters=60)
+    p_direct = jnp.linalg.solve(h, g)
+    np.testing.assert_allclose(np.asarray(p_cg), np.asarray(p_direct),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_pinv_solve_singular():
+    key = jax.random.PRNGKey(2)
+    d, rank = 15, 8
+    h = _psd(key, d, rank=rank)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    p = solvers.psd_pinv_solve(h, g)
+    # Match the f32-appropriate cutoff; numpy's default rcond keeps noise
+    # eigenvalues (~1e-7) and explodes.
+    p_np = np.linalg.pinv(np.asarray(h), rcond=1e-6,
+                          hermitian=True) @ np.asarray(g)
+    np.testing.assert_allclose(np.asarray(p), p_np, rtol=1e-3, atol=1e-4)
+
+
+def test_minres_consistent_system():
+    key = jax.random.PRNGKey(3)
+    h = _psd(key, 18) + 0.1 * jnp.eye(18)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (18,))
+    p = solvers.minres(lambda v: h @ v, g, iters=40)
+    np.testing.assert_allclose(np.asarray(h @ p), np.asarray(g),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_minres_singular_matches_pinv_on_range():
+    """For b in range(H), MINRES converges to H^+ b (Newton-MR direction)."""
+    key = jax.random.PRNGKey(4)
+    d, rank = 16, 9
+    h = _psd(key, d, rank=rank)
+    raw = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    b = h @ raw                       # force b into range(H)
+    p = solvers.minres(lambda v: h @ v, b, iters=40)
+    p_pinv = np.linalg.pinv(np.asarray(h), rcond=1e-6,
+                            hermitian=True) @ np.asarray(b)
+    np.testing.assert_allclose(np.asarray(p), p_pinv, rtol=1e-2, atol=1e-3)

@@ -1,0 +1,62 @@
+"""Straggler model + simulation clock invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import straggler as sg
+
+
+def test_sample_shapes_and_positivity():
+    m = sg.StragglerModel()
+    t = m.sample_times(jax.random.PRNGKey(0), 100)
+    assert t.shape == (100,)
+    assert (np.asarray(t) > 0).all()
+
+
+def test_tail_fraction_close_to_p():
+    """~2% of workers straggle (Fig. 1)."""
+    m = sg.StragglerModel(p_tail=0.02, body_sigma=0.01)
+    t = np.asarray(m.sample_times(jax.random.PRNGKey(1), 20000))
+    med = np.median(t)
+    frac = (t > 1.25 * med).mean()
+    assert 0.005 < frac < 0.05
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 999), k_frac=st.floats(0.1, 1.0))
+def test_policy_ordering(seed, k_frac):
+    """k-of-n <= wait-all, and k-of-n monotone in k."""
+    m = sg.StragglerModel(p_tail=0.1)
+    t = m.sample_times(jax.random.PRNGKey(seed), 64)
+    k = max(1, int(64 * k_frac))
+    assert float(sg.k_of_n_time(t, k)) <= float(sg.wait_all_time(t)) + 1e-6
+    if k > 1:
+        assert float(sg.k_of_n_time(t, k - 1)) <= float(sg.k_of_n_time(t, k)) + 1e-6
+
+
+def test_k_of_n_mask_has_at_least_k():
+    m = sg.StragglerModel(p_tail=0.2)
+    t = m.sample_times(jax.random.PRNGKey(3), 50)
+    mask = sg.k_of_n_mask(t, 30)
+    assert int(mask.sum()) >= 30
+
+
+def test_speculative_beats_wait_all_with_heavy_tail():
+    m = sg.StragglerModel(p_tail=0.3, tail_lo=3.0, tail_hi=6.0)
+    wins = 0
+    for s in range(20):
+        t = m.sample_times(jax.random.PRNGKey(s), 100)
+        spec = float(sg.speculative_time(t, jax.random.PRNGKey(1000 + s), m))
+        if spec <= float(sg.wait_all_time(t)) + 1e-6:
+            wins += 1
+    assert wins >= 15
+
+
+def test_clock_accumulates():
+    clock = sg.SimClock(sg.StragglerModel())
+    e1, m1 = clock.phase(jax.random.PRNGKey(0), 16, policy="wait_all")
+    e2, m2 = clock.phase(jax.random.PRNGKey(1), 16, policy="k_of_n", k=12)
+    assert clock.time == float(e1) + float(e2)
+    assert m1.all()
+    assert int(m2.sum()) >= 12

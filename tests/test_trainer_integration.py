@@ -1,0 +1,120 @@
+"""Trainer integration: fault tolerance + elastic rescale + resilient grads.
+
+Multi-device cases run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main test process
+keeps its single-device view (per the dry-run spec, the flag must never be
+set globally)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.mesh import make_host_mesh
+from repro.training.trainer import Trainer, TrainerConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_sub(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"stdout:{out.stdout}\nstderr:{out.stderr}"
+    return out.stdout
+
+
+def test_loss_decreases_single_device(tmp_path):
+    cfg = TrainerConfig(arch="qwen3-4b", steps=10, batch=4, seq=64,
+                        ckpt_dir=str(tmp_path), ckpt_every=5, lr=1e-3)
+    tr = Trainer(cfg, make_host_mesh())
+    params, opt = tr.init_state()
+    _, _, hist = tr.run(params, opt)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_failure_restart_resumes_from_checkpoint(tmp_path):
+    cfg = TrainerConfig(arch="qwen3-4b", steps=12, batch=4, seq=64,
+                        ckpt_dir=str(tmp_path), ckpt_every=4, lr=1e-3)
+    tr = Trainer(cfg, make_host_mesh())
+    hist = tr.run_with_restarts(fail_at=9)
+    steps = [h["step"] for h in hist]
+    assert steps[-1] == 11
+    assert 8 in steps            # resumed from step-8 checkpoint
+    # deterministic data => the post-restart loss at a step matches a
+    # continuous run's trajectory direction (sanity: still decreasing)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_restart_determinism_same_data(tmp_path):
+    """batch_at(step) is pure — restartability requires replay-identical
+    batches."""
+    cfg = TrainerConfig(arch="qwen3-4b", steps=4, batch=2, seq=32)
+    tr = Trainer(cfg, make_host_mesh())
+    b1 = tr.pipeline.batch_at(3)
+    b2 = tr.pipeline.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_multidevice_train_and_elastic_restore():
+    """8 devices: train on a (4,2) mesh, checkpoint, restore onto a (2,2)
+    mesh (elastic rescale) and keep training."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, tempfile, os
+        from repro.launch.mesh import make_mesh
+        from repro.training.trainer import Trainer, TrainerConfig
+        d = tempfile.mkdtemp()
+        cfg = TrainerConfig(arch="qwen3-4b", steps=6, batch=8, seq=64,
+                            ckpt_dir=d, ckpt_every=3, lr=1e-3)
+        tr = Trainer(cfg, make_mesh((4, 2), ("data", "model")))
+        p, o = tr.init_state()
+        p, o, hist = tr.run(p, o)
+        print("MESH1_LOSS", hist[0]["loss"], hist[-1]["loss"])
+
+        # elastic: rebuild on a smaller mesh from the same checkpoint
+        cfg2 = TrainerConfig(arch="qwen3-4b", steps=8, batch=8, seq=64,
+                             ckpt_dir=d, ckpt_every=100, lr=1e-3)
+        tr2 = Trainer(cfg2, make_mesh((2, 2), ("data", "model")))
+        p2, o2 = tr2.init_state()
+        from repro.distributed import opt_state_shardings
+        state = tr2.ckpt.restore(
+            tr2.ckpt.latest_step(),
+            {"params": jax.eval_shape(lambda: p2),
+             "opt": jax.eval_shape(lambda: o2)},
+            {"params": tr2.p_shard,
+             "opt": opt_state_shardings(tr2.p_shard, None)})
+        p2, o2, hist2 = tr2.run(state["params"], state["opt"],
+                                start_step=tr2.ckpt.latest_step())
+        print("MESH2_LOSS", hist2[0]["loss"], hist2[-1]["loss"])
+        assert hist2[-1]["loss"] < hist[0]["loss"]
+        print("ELASTIC_OK")
+    """)
+    assert "ELASTIC_OK" in out
+
+
+def test_multidevice_resilient_grads():
+    """k-of-n resilient gradient reduction trains through stragglers."""
+    out = _run_sub("""
+        import jax
+        from repro.launch.mesh import make_mesh
+        from repro.training.trainer import Trainer, TrainerConfig
+        from repro.core.straggler import StragglerModel
+        cfg = TrainerConfig(arch="qwen3-4b", steps=8, batch=8, seq=64,
+                            lr=1e-3, resilient_grads=True,
+                            straggler=StragglerModel(p_tail=0.3))
+        tr = Trainer(cfg, make_mesh((8,), ("data",)))
+        p, o = tr.init_state()
+        p, o, hist = tr.run(p, o)
+        print("RES_LOSS", hist[0]["loss"], hist[-1]["loss"])
+        assert hist[-1]["loss"] < hist[0]["loss"]
+        print("RESILIENT_OK")
+    """)
+    assert "RESILIENT_OK" in out
