@@ -38,3 +38,13 @@ def best_f(*histories, rel: float = 0.01) -> float:
 
 def row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def json_row(name: str, us: float, **payload) -> Dict[str, object]:
+    """One JSON-ready benchmark row; payload keys land in ``derived`` as
+    ``k=v`` pairs (CSV-safe, no commas) so BENCH_*.json trajectories can
+    track each key — e.g. one row per sketch family in the fig7 sweep."""
+    def fmt(v):
+        return f"{v:.4g}" if isinstance(v, float) else str(v)
+    return {"name": name, "us": us,
+            "derived": ";".join(f"{k}={fmt(v)}" for k, v in payload.items())}

@@ -7,6 +7,8 @@ the compiled kernels.  Derived column reports achieved GFLOP/s of the ref.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -46,6 +48,18 @@ def run(quick: bool = True):
     err2 = float(jnp.abs(ops.oversketch_gram(a_t, surv) - f_ref2()).max())
     rows.append({"name": "kernel_oversketch_gram_pallas_check", "us": 0.0,
                  "derived": f"max_err={err2:.2e}"})
+
+    # srht fwht (blocked Kronecker-matmul kernel vs butterfly oracle)
+    kf, nf, df = (4, 1024, 256) if quick else (8, 8192, 1000)
+    xf = jax.random.normal(ks, (kf, nf, df))
+    f_ref_f = jax.jit(lambda: ref.fwht(xf))
+    usf = time_fn(f_ref_f)
+    flopsf = kf * nf * math.log2(nf) * df
+    rows.append({"name": "kernel_fwht_ref", "us": usf,
+                 "derived": f"gflops={flopsf/usf/1e3:.2f};shape=({kf},{nf},{df})"})
+    errf = float(jnp.abs(ops.fwht(xf) - f_ref_f()).max())
+    rows.append({"name": "kernel_fwht_pallas_check", "us": 0.0,
+                 "derived": f"max_err={errf:.2e}"})
 
     # coded matvec
     w, bb, s = (25, 128, 2048) if quick else (64, 256, 8192)

@@ -4,8 +4,15 @@ Master-side Python loop (the paper's T is in the tens) dispatching jitted
 distributed phases:
 
   1. gradient  — exact, straggler-resilient via the 2-D product code (Alg. 1)
-  2. Hessian   — approximate, straggler-resilient via OverSketch (Alg. 2)
-  3. direction — Cholesky/CG (strongly convex) or pinv/MINRES (weakly convex)
+  2. Hessian   — approximate, straggler-resilient via a block-structured
+     sketch (Alg. 2).  The family is pluggable (``NewtonConfig.sketch_family``
+     resolves through ``repro.sketching``): the paper's OverSketch plus SRHT,
+     SJLT, Gaussian and Nystrom row-sampling, all sharing the k-of-n
+     survivor semantics because every family is per-block unbiased.
+  3. direction — Cholesky/CG (strongly convex) or pinv/MINRES (weakly
+     convex), optionally Marchenko-Pastur debiased (``debias=True``,
+     Romanov-Zhang-Pilanci 2024); ``sketch_mode="distributed-avg"`` instead
+     averages per-worker debiased directions (Bartan-Pilanci 2020).
   4. step size — distributed Armijo (Eq. 5) / grad-norm (Eq. 6) line search
 
 Each distributed phase is scored by the straggler simulation clock
@@ -26,6 +33,7 @@ import numpy as np
 
 from repro.core import coded, linesearch, sketch, solvers, straggler
 from repro.core.objectives import Dataset
+from repro import sketching
 
 
 def _decodable(erased_grid: "np.ndarray") -> bool:
@@ -66,6 +74,15 @@ class NewtonConfig:
     cg_iters: int = 64
     gradient_policy: str = "coded"  # coded | wait_all | ignore | speculative
     hessian_policy: str = "oversketch"   # oversketch | exact | exact_speculative
+    # Sketch family registry key: oversketch | srht | sjlt | gaussian | nystrom
+    sketch_family: str = "oversketch"
+    # Marchenko-Pastur inverse-bias correction of the sketched direction.
+    debias: bool = False
+    # blocks: one sketch, blocks pooled into a single Gram (paper Alg. 2).
+    # distributed-avg: each surviving block-worker solves its own d x d
+    # system and the master averages (debiased) directions — needs
+    # block_size > d to be well-posed.
+    sketch_mode: str = "blocks"
     coded_block_rows: int = 256
     seed: int = 0
     use_kernels: bool = False       # route sketch through repro.kernels ops
@@ -185,19 +202,43 @@ def _solve_direction(objective, h_hat: jax.Array, g: jax.Array,
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_sketched_hessian(objective, block_size: int, use_kernels: bool):
-    """Hashable frozen-dataclass objectives => cacheable jitted closures."""
-    def fn(w, data, h, sigma, survivors):
+def _jitted_sketched_hessian(objective, family: "sketching.SketchFamily",
+                             use_kernels: bool):
+    """Hashable frozen-dataclass objectives AND families => cacheable
+    jitted closures.  ``state`` is the family's sketch realization pytree."""
+    def fn(w, data, state, survivors):
         a = objective.hess_sqrt(w, data)
         d = a.shape[1]
         reg = objective.hess_reg * jnp.eye(d, dtype=a.dtype)
-        if use_kernels:
-            from repro.kernels import ops as kops
-            a_t = kops.count_sketch_apply(h, sigma, a, block_size)
-            return kops.oversketch_gram(a_t, survivors) + reg
-        cs = sketch.CountSketch(h=h, sigma=sigma, block_size=block_size)
-        a_t = sketch.apply_sketch(cs, a)
-        return sketch.sketched_gram(a_t, survivors) + reg
+        return family.gram(state, a, survivors, use_kernels=use_kernels) + reg
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_distavg_direction(objective, family: "sketching.SketchFamily",
+                              debias: bool, use_kernels: bool):
+    """distributed-avg mode (Bartan-Pilanci 2020): every surviving block-
+    worker solves its own per-block sketched system, the master averages
+    the (Marchenko-Pastur debiased) directions.  Per-worker sketch rows =
+    block_size, so the debias factor is 1 - d/b.  Also returns the masked
+    average of H_k g for the weakly-convex line search."""
+    b = family.cfg.block_size
+
+    def fn(w, data, g, state, survivors):
+        a = objective.hess_sqrt(w, data)
+        d = a.shape[1]
+        a_t = family.apply(state, a, use_kernels=use_kernels)  # (K, b, d)
+        eye = jnp.eye(d, dtype=a_t.dtype)
+        grams = jnp.einsum("kbd,kbe->kde", a_t, a_t) \
+            + objective.hess_reg * eye
+        p_k = -jax.vmap(lambda hk: solvers.psd_solve(hk, g))(grams)
+        if debias:
+            p_k = sketching.debias_direction(p_k, d, b)
+        m = survivors.astype(a_t.dtype)
+        n_avail = jnp.maximum(m.sum(), 1.0)
+        p = jnp.einsum("k,kd->d", m, p_k) / n_avail
+        hg = jnp.einsum("k,kde,e->d", m, grams, g) / n_avail
+        return p, hg
     return jax.jit(fn)
 
 
@@ -217,19 +258,22 @@ def _hess_rows(objective, data: Dataset, w: jax.Array) -> Tuple[int, int]:
 
 def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
                    key: jax.Array, clock: Optional[straggler.SimClock]
-                   ) -> jax.Array:
-    """Returns H_hat (approximate or exact) including the hess_reg * I term.
+                   ) -> Tuple[jax.Array, Optional[float]]:
+    """Returns (H_hat, m_eff): the (approximate or exact) Hessian including
+    the hess_reg * I term, and the surviving sketch-row count m_eff that the
+    Marchenko-Pastur debias factor needs (None on the exact path).
 
-    Worker accounting follows the paper: OverSketch invokes (N+e)*(d/b)^2
-    workers (Alg. 2 step 3) vs ceil(n/b)*(d/b)^2 for the exact product —
-    same per-worker block work, vastly different worker counts and master
-    I/O when n >> m."""
+    Worker accounting follows the paper: a sketched Hessian invokes
+    (N+e)*(d/b)^2 workers (Alg. 2 step 3) vs ceil(n/b)*(d/b)^2 for the exact
+    product — same per-worker block work, vastly different worker counts and
+    master I/O when n >> m.  Per-worker flops and I/O come from the family's
+    cost hooks, so e.g. dense Gaussian pays its O(n*b*d) apply honestly."""
     n_rows, d = _hess_rows(objective, data, w)
     b = max(cfg.sketch.block_size, 1)
     d_blocks = max(1, -(-d // b))
-    block_flops = 2.0 * b * min(d, b) ** 2    # one (b x d_tile) gram block
     if cfg.hessian_policy == "oversketch":
         scfg = cfg.sketch
+        fam = sketching.get(cfg.sketch_family, scfg)
         survivors = jnp.ones((scfg.total_blocks,), bool)
         if clock is not None:
             # Alg. 2 termination is per OUTPUT TILE: each of the (d/b)^2
@@ -239,15 +283,16 @@ def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
             total_workers = scfg.total_blocks * d_blocks * d_blocks
             _, mask = clock.phase(key, scfg.total_blocks, policy="k_of_n",
                                   k=scfg.num_blocks,
-                                  flops_per_worker=block_flops,
-                                  comm_units=0.05 * total_workers)
+                                  flops_per_worker=fam.block_flops(n_rows, d),
+                                  comm_units=fam.comm_units(d) * total_workers)
             survivors = mask
-        cs = sketch.sample_countsketch(jax.random.fold_in(key, 7),
-                                       n_rows, scfg)
-        fn = _jitted_sketched_hessian(objective, scfg.block_size,
-                                      cfg.use_kernels)
-        return fn(w, data, cs.h, cs.sigma, survivors)
+        state = fam.sample(jax.random.fold_in(key, 7), n_rows)
+        fn = _jitted_sketched_hessian(objective, fam, cfg.use_kernels)
+        h_hat = fn(w, data, state, survivors)
+        m_eff = float(jnp.sum(survivors)) * scfg.block_size
+        return h_hat, m_eff
     # exact Hessian (paper's "exact Newton" baseline)
+    block_flops = 2.0 * b * min(d, b) ** 2    # one (b x d_tile) gram block
     if clock is not None:
         workers = max(1, -(-n_rows // b)) * d_blocks * d_blocks
         policy = ("speculative" if cfg.hessian_policy == "exact_speculative"
@@ -255,7 +300,37 @@ def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
         clock.phase(key, workers, policy=policy,
                     flops_per_worker=block_flops,
                     comm_units=0.05 * workers)
-    return _jitted_exact_hessian(objective)(w, data)
+    return _jitted_exact_hessian(objective)(w, data), None
+
+
+def _distavg_direction_phase(objective, data: Dataset, w: jax.Array,
+                             g: jax.Array, cfg: NewtonConfig, key: jax.Array,
+                             clock: Optional[straggler.SimClock]
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """sketch_mode="distributed-avg": one worker per sketch block, each
+    paying its apply + d x d Gram + local Cholesky solve; the master only
+    ships d-vectors back (comm ~ d per worker, not a d x d Gram tile).
+    Returns (direction, averaged H_k g for the weakly-convex search)."""
+    n_rows, d = _hess_rows(objective, data, w)
+    scfg = cfg.sketch
+    fam = sketching.get(cfg.sketch_family, scfg)
+    survivors = jnp.ones((scfg.total_blocks,), bool)
+    if clock is not None:
+        # No coded-matmul stage to amortize into here, so a family that
+        # reports apply_flops=0 (oversketch) still pays one streaming pass
+        # over A on each worker.
+        apply_flops = fam.apply_flops(n_rows, d) or 2.0 * n_rows * d
+        worker_flops = (apply_flops
+                        + 2.0 * scfg.block_size * d * d + d ** 3 / 3.0)
+        _, mask = clock.phase(key, scfg.total_blocks, policy="k_of_n",
+                              k=scfg.num_blocks,
+                              flops_per_worker=worker_flops,
+                              comm_units=0.01 * scfg.total_blocks)
+        survivors = mask
+    state = fam.sample(jax.random.fold_in(key, 7), n_rows)
+    fn = _jitted_distavg_direction(objective, fam, cfg.debias,
+                                   cfg.use_kernels)
+    return fn(w, data, g, state, survivors)
 
 
 def oversketched_newton(objective, data: Dataset, w0: jax.Array,
@@ -263,6 +338,20 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
                         model: Optional[straggler.StragglerModel] = straggler.StragglerModel()
                         ) -> NewtonResult:
     """Run OverSketched Newton; returns the iterate and a per-iteration log."""
+    if cfg.sketch_mode not in ("blocks", "distributed-avg"):
+        raise ValueError(f"unknown sketch_mode {cfg.sketch_mode!r}")
+    if cfg.sketch_mode == "distributed-avg":
+        if cfg.hessian_policy != "oversketch":
+            raise ValueError(
+                "sketch_mode='distributed-avg' requires "
+                f"hessian_policy='oversketch', got {cfg.hessian_policy!r}")
+        d_hess = int(np.asarray(w0).size)
+        if cfg.sketch.block_size <= d_hess:
+            raise ValueError(
+                "distributed-avg needs block_size > Hessian dim for the "
+                f"per-worker solves to be well-posed: block_size="
+                f"{cfg.sketch.block_size} <= d={d_hess}")
+    sketching.get(cfg.sketch_family, cfg.sketch)   # fail fast on bad family
     key = jax.random.PRNGKey(cfg.seed)
     clock = straggler.SimClock(model) if model is not None else None
     engine = CodedMatvecEngine(data, cfg.coded_block_rows, model)
@@ -275,6 +364,8 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
     grad_fn = jax.jit(objective.gradient)
     val_fn = jax.jit(objective.value)
     live_cfg = cfg
+    init_sketch_dim = cfg.sketch.sketch_dim   # growth cap baseline; cfg is
+    #                                           rebound to live_cfg below
     prev_f = None
     prev_decrease = None
 
@@ -291,11 +382,17 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
                 cfg.gradient_policy)
             g = objective.gradient_via(w, data, mv)
 
-        # --- 2. sketched Hessian (Alg. 2) ----------------------------------
-        h_hat = _hessian_phase(objective, data, w, cfg, kh, clock)
-
-        # --- 3. direction at the master ------------------------------------
-        p = _solve_direction(objective, h_hat, g, cfg)
+        # --- 2+3. sketched Hessian (Alg. 2) and direction -------------------
+        if cfg.sketch_mode == "distributed-avg":
+            # per-worker solves + master-side direction averaging
+            p, hg = _distavg_direction_phase(objective, data, w, g, cfg,
+                                             kh, clock)
+        else:
+            h_hat, m_eff = _hessian_phase(objective, data, w, cfg, kh, clock)
+            p = _solve_direction(objective, h_hat, g, cfg)
+            if cfg.debias and m_eff is not None:
+                p = sketching.debias_direction(p, p.shape[0], m_eff)
+            hg = None
 
         # --- 4. distributed line search (Sec. 3.2) --------------------------
         if cfg.unit_step:
@@ -304,8 +401,10 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
             step = linesearch.linesearch_strongly_convex(
                 objective, data, w, p, g, cfg.beta, cfg.candidates)
         else:
+            if hg is None:
+                hg = h_hat @ g
             step = linesearch.linesearch_weakly_convex(
-                objective, data, w, p, g, h_hat @ g, cfg.beta, cfg.candidates)
+                objective, data, w, p, g, hg, cfg.beta, cfg.candidates)
         if clock is not None and not cfg.unit_step:
             nb = max(1, data.x.shape[0] // max(cfg.coded_block_rows, 1))
             ls_flops = 2.0 * cfg.coded_block_rows * data.x.shape[1] * \
@@ -324,11 +423,15 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
         hist["sketch_dim"].append(live_cfg.sketch.sketch_dim)
 
         # --- adaptive sketch growth (paper Thm 3.2 remark) ------------------
-        if cfg.adaptive_sketch and prev_f is not None and \
-                prev_decrease is not None and prev_decrease > 0:
+        if cfg.adaptive_sketch and prev_f is not None:
             decrease = prev_f - f_now
-            stalled = decrease < cfg.adaptive_stall_ratio * prev_decrease
-            grown = live_cfg.sketch.sketch_dim // cfg.sketch.sketch_dim
+            # Stall = progress fell off vs the last iteration; an INCREASE
+            # in f (decrease < 0, the eps-too-coarse divergence regime) is
+            # always a stall, whatever the previous decrease was.
+            stalled = decrease < 0 or (
+                prev_decrease is not None and prev_decrease > 0
+                and decrease < cfg.adaptive_stall_ratio * prev_decrease)
+            grown = live_cfg.sketch.sketch_dim // init_sketch_dim
             if stalled and grown < cfg.adaptive_max_growth:
                 new_sketch = dataclasses.replace(
                     live_cfg.sketch,

@@ -1,0 +1,56 @@
+"""Backfill newer jax public APIs on older jaxlib (container ships 0.4.37).
+
+The distributed paths use the modern spellings — ``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)`` — which
+moved out of ``jax.experimental`` after 0.4.x.  On versions that already
+provide them this module is a no-op; otherwise it aliases the experimental
+implementations so one codebase runs on both.  Imported for its side effect
+from ``repro/__init__`` (before any mesh/shard_map call site).
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    @functools.wraps(_experimental_shard_map)
+    def _shard_map(f, *args, **kwargs):
+        # post-0.4.x renamed check_rep -> check_vma
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _experimental_shard_map(f, *args, **kwargs)
+
+    jax.shard_map = _shard_map
+
+if not hasattr(jax.sharding, "AxisType"):
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+# Signature inspection, not a probe call: calling make_mesh at import time
+# would initialize the backend before the app can set JAX_PLATFORMS etc.
+if hasattr(jax, "make_mesh"):
+    _HAS_AXIS_TYPES = "axis_types" in inspect.signature(
+        jax.make_mesh).parameters
+else:
+    _HAS_AXIS_TYPES = True   # nothing to wrap; call sites will fail loudly
+
+if not _HAS_AXIS_TYPES:
+    _orig_make_mesh = jax.make_mesh
+
+    @functools.wraps(_orig_make_mesh)
+    def _make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+        # axis_types only selects Auto vs Explicit sharding inference; 0.4.x
+        # meshes are always Auto, so dropping the argument is faithful.
+        return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = _make_mesh

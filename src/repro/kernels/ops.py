@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import coded_matvec as _cmv
 from repro.kernels import count_sketch as _cs
 from repro.kernels import oversketch_matmul as _og
+from repro.kernels import srht as _srht
 
 
 def _interpret(explicit: Optional[bool]) -> bool:
@@ -36,6 +37,11 @@ def oversketch_gram(a_tilde: jax.Array, survivors: jax.Array,
     """Masked Gram (K,b,d),(K,) -> (d,d), rescaled by survivor count."""
     return _og.oversketch_gram(a_tilde, survivors,
                                interpret=_interpret(interpret))
+
+
+def fwht(x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+    """Orthonormal Walsh-Hadamard transform along axis 1 of (K, n, d)."""
+    return _srht.fwht(x, interpret=_interpret(interpret))
 
 
 def coded_block_matvec(enc: jax.Array, x: jax.Array, erased: jax.Array,

@@ -30,6 +30,28 @@ def oversketch_gram(a_tilde: jax.Array, survivors: jax.Array) -> jax.Array:
     return jnp.einsum("k,kbd,kbe->de", m, a_tilde, a_tilde) / n_avail
 
 
+def fwht(x: jax.Array) -> jax.Array:
+    """Orthonormal Walsh-Hadamard transform along axis 1 of (K, n, d).
+
+    Radix-2 butterfly (Sylvester / natural ordering): the oracle for the
+    blocked Kronecker-matmul Pallas kernel.  n must be a power of two.
+    """
+    k, n, d = x.shape
+    if n & (n - 1):
+        raise ValueError(f"fwht length {n} must be a power of two")
+
+    def one(xb):
+        y, h = xb, 1
+        while h < n:
+            y = y.reshape(n // (2 * h), 2, h, d)
+            y = jnp.stack([y[:, 0] + y[:, 1], y[:, 0] - y[:, 1]], axis=1)
+            y = y.reshape(n, d)
+            h *= 2
+        return y / jnp.sqrt(jnp.asarray(n, y.dtype))
+
+    return jax.vmap(one)(x)
+
+
 def coded_block_matvec(enc: jax.Array, x: jax.Array,
                        erased: jax.Array) -> jax.Array:
     """Per-worker block products with straggler masking.

@@ -197,6 +197,8 @@ def analyze(lowered, info: Dict[str, Any]) -> Dict[str, Any]:
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # pre-0.5 jax: one dict per program
+        cost = cost[0] if cost else None
     chips = 1
     for v in info["mesh"].values():
         chips *= v

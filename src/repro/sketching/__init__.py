@@ -1,0 +1,25 @@
+"""Pluggable sketching subsystem: block-structured sketch families behind a
+string-keyed registry, plus Marchenko-Pastur direction debiasing.
+
+Every family satisfies the per-block unbiasedness E[S_i S_i^T] = I that the
+paper's Eq. 4 survivor-rescale argument needs, so each one inherits the
+k-of-n straggler semantics of Alg. 2 unchanged.  ``get(name, cfg)`` is the
+entry point used by ``core.newton`` (``NewtonConfig.sketch_family``).
+"""
+from repro.sketching.base import SketchFamily, next_pow2
+from repro.sketching.registry import available, get, register
+from repro.sketching.debias import debias_direction, mp_factor
+
+# Importing a family module registers it.
+from repro.sketching.oversketch import OverSketchFamily
+from repro.sketching.srht import SRHTFamily
+from repro.sketching.sjlt import SJLTFamily
+from repro.sketching.gaussian import GaussianFamily
+from repro.sketching.nystrom import NystromFamily
+
+__all__ = [
+    "SketchFamily", "available", "get", "register",
+    "debias_direction", "mp_factor", "next_pow2",
+    "OverSketchFamily", "SRHTFamily", "SJLTFamily", "GaussianFamily",
+    "NystromFamily",
+]

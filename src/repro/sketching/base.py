@@ -1,0 +1,107 @@
+"""SketchFamily protocol: the pluggable randomized-sketch axis.
+
+The paper fixes one sketch family — stacked Count-Sketch blocks (Eq. 4) —
+but the straggler-resilience argument only needs the *block structure*: a
+sketch ``S = [S_1, ..., S_{N+e}]`` whose blocks ``S_i in R^{n x b}`` are
+independent and satisfy ``E[S_i S_i^T] = I``.  Any such family gives an
+unbiased sketched Gram ``H_hat = (1/N_avail) sum_{i in survivors} (S_i^T A)^T
+(S_i^T A)`` under k-of-n block survival, so Alg. 2's "wait for any N of N+e"
+semantics carry over verbatim.
+
+This module defines the protocol every family implements:
+
+  sample(key, num_rows) -> state     pytree of arrays (jit-transparent)
+  apply(state, a)       -> (total_blocks, b, d) per-block  S_i^T A
+  gram(state, a, survivors) -> (d, d) masked, rescaled Gram estimate
+  block_flops(num_rows, d) -> float  per-worker cost for the straggler clock
+  comm_units(d)         -> float     per-worker master-I/O units
+
+Families are frozen dataclasses (hashable) so jitted closures keyed on a
+family instance can be lru_cached, mirroring ``newton._jitted_*``.
+
+References: OverSketched Newton Eq. 4 / Alg. 2 (block semantics); Romanov,
+Zhang & Pilanci 2024 "Newton Meets Marchenko-Pastur" (family-agnostic
+debiasing, see ``sketching.debias``); Bartan & Pilanci 2020 "Distributed
+Averaging Methods for Randomized Second Order Optimization" (per-worker
+independent sketches, see ``newton`` sketch_mode="distributed-avg").
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.sketch as core_sketch
+from repro.core.sketch import OverSketchConfig
+
+SketchState = Any  # pytree of arrays; structure is family-specific
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchFamily(abc.ABC):
+    """A configured block-structured sketch family (see module docstring).
+
+    ``cfg`` carries the shared dimension accounting — sketch_dim m = N*b,
+    block_size b, straggler_tolerance zeta => total_blocks N+e — reused
+    across families so any family drops into the Alg. 2 worker layout.
+    """
+
+    cfg: OverSketchConfig
+
+    # Subclasses set this; used as the registry key and in benchmark rows.
+    name = "abstract"
+
+    @abc.abstractmethod
+    def sample(self, key: jax.Array, num_rows: int) -> SketchState:
+        """Draw an independent realization of all N+e blocks (fresh per
+        Newton iteration, like the paper's per-iteration sketch)."""
+
+    @abc.abstractmethod
+    def apply(self, state: SketchState, a: jax.Array,
+              use_kernels: bool = False) -> jax.Array:
+        """Per-block application A (n, d) -> (total_blocks, b, d), unscaled
+        by 1/sqrt(N) (the survivor rescale in ``gram`` absorbs it)."""
+
+    def gram(self, state: SketchState, a: jax.Array,
+             survivors: Optional[jax.Array] = None,
+             use_kernels: bool = False) -> jax.Array:
+        """Masked H_hat = (1/N_avail) sum_i A_tilde_i^T A_tilde_i.
+
+        Shared across families: per-block unbiasedness (E[S_i S_i^T] = I)
+        makes dropping blocks + rescaling exact for every family.
+        """
+        a_t = self.apply(state, a, use_kernels=use_kernels)
+        if use_kernels:
+            from repro.kernels import ops as kops
+            if survivors is None:
+                survivors = jnp.ones((a_t.shape[0],), bool)
+            return kops.oversketch_gram(a_t, survivors)
+        return core_sketch.sketched_gram(a_t, survivors)
+
+    # ------------------------------------------------------------------ cost
+    # Hooks for the straggler SimClock: per-worker flops and master-I/O for
+    # one sketch-block worker (Alg. 2 step 3).  The default charges only the
+    # Gram-tile matmul — the OverSketch family folds sketching into the coded
+    # matmul workers (paper Sec. 4.1), so its apply cost is amortized.
+    # Families whose apply is a separate pass override ``apply_flops``.
+
+    def apply_flops(self, num_rows: int, d: int) -> float:
+        """Per-block cost of forming A_tilde_i, in flops (0 if amortized)."""
+        return 0.0
+
+    def block_flops(self, num_rows: int, d: int) -> float:
+        b = self.cfg.block_size
+        gram_tile = 2.0 * b * min(d, b) ** 2
+        return gram_tile + self.apply_flops(num_rows, d)
+
+    def comm_units(self, d: int) -> float:
+        """Master-I/O units per worker (one b x min(d,b) output tile)."""
+        return 0.05
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (Hadamard sizes; static under jit)."""
+    return 1 << max(0, (n - 1).bit_length())

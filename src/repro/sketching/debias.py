@@ -1,0 +1,43 @@
+"""Marchenko-Pastur debiasing of the sketched Newton direction.
+
+Sketching the Hessian biases the *inverse*: for an m-row sketch of a rank-d
+Gram, E[H_hat^{-1}] inflates relative to H^{-1} — for Gaussian sketches
+E[H_hat^{-1}] = m/(m-d-1) H^{-1} exactly (inverse-Wishart), and under
+Marchenko-Pastur asymptotics (m, d -> inf, d/m -> xi) the inflation is
+1/(1 - xi) for *any* of the rotationally-mixed families here (universality:
+Romanov, Zhang & Pilanci 2024, "Newton Meets Marchenko-Pastur", Thm 3.1).
+The sketched direction p_hat = -H_hat^{-1} g is therefore too long in
+expectation; rescaling by
+
+    gamma = 1 - d/m
+
+makes it asymptotically unbiased:  E[gamma * p_hat] -> p_newton.  That is
+what turns independent per-worker sketches into an embarrassingly parallel
+Newton step (average debiased directions, no Hessian communication) — the
+``sketch_mode="distributed-avg"`` path of ``core.newton`` (cf. Bartan &
+Pilanci 2020, Distributed Averaging Methods, Sec. 3).
+
+With straggler-dropped blocks, m is the *surviving* sketch dimension
+(survivor blocks x block_size), so the correction adapts per iteration to
+whichever k-of-n subset actually arrived.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Below this survivor-dim margin the MP correction is extrapolating far
+# outside its m > d regime; clamp so a bad straggler round cannot flip the
+# direction's sign or zero it out.
+MIN_FACTOR = 0.05
+
+
+def mp_factor(dim: int, sketch_rows) -> jax.Array:
+    """Debias factor gamma = max(1 - d/m, MIN_FACTOR); jit-safe in m."""
+    m = jnp.maximum(jnp.asarray(sketch_rows, jnp.float32), 1.0)
+    return jnp.maximum(1.0 - float(dim) / m, MIN_FACTOR)
+
+
+def debias_direction(p: jax.Array, dim: int, sketch_rows) -> jax.Array:
+    """Rescale a sketched Newton direction to be asymptotically unbiased."""
+    return p * mp_factor(dim, sketch_rows).astype(p.dtype)

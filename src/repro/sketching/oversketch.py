@@ -1,0 +1,37 @@
+"""OverSketch family: the paper's stacked Count-Sketch blocks (Eq. 4).
+
+This is the seed implementation from ``repro.core.sketch`` migrated behind
+the ``SketchFamily`` protocol; ``repro.core`` re-exports are untouched and
+the reference functions there remain the kernels' oracle.  Per-block
+unbiasedness E[S_i S_i^T] = I is the Count-Sketch property the paper's
+Lemma 6.1 builds on.
+
+Cost model: sketching is folded into the coded matmul workers (paper
+Sec. 4.1 amortizes encoding), so ``apply_flops`` stays 0 and a block worker
+is charged only its Gram tile — matching the seed's clock accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+import repro.core.sketch as core_sketch
+from repro.sketching.base import SketchFamily
+from repro.sketching.registry import register
+
+
+@register("oversketch")
+@dataclasses.dataclass(frozen=True)
+class OverSketchFamily(SketchFamily):
+
+    def sample(self, key: jax.Array, num_rows: int) -> core_sketch.CountSketch:
+        return core_sketch.sample_countsketch(key, num_rows, self.cfg)
+
+    def apply(self, state: core_sketch.CountSketch, a: jax.Array,
+              use_kernels: bool = False) -> jax.Array:
+        if use_kernels:
+            from repro.kernels import ops as kops
+            return kops.count_sketch_apply(state.h, state.sigma, a,
+                                           self.cfg.block_size)
+        return core_sketch.apply_sketch(state, a)

@@ -1,0 +1,41 @@
+"""String-keyed registry of sketch families.
+
+``get("srht", cfg)`` returns a configured ``SketchFamily``; families
+self-register at import time via the ``@register`` decorator (mirroring
+``repro.models.registry``).  The Newton loop resolves
+``NewtonConfig.sketch_family`` through this table, so adding a family is
+one module + one decorator — no optimizer changes.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Type
+
+from repro.core.sketch import OverSketchConfig
+from repro.sketching.base import SketchFamily
+
+_FAMILIES: Dict[str, Type[SketchFamily]] = {}
+
+
+def register(name: str) -> Callable[[Type[SketchFamily]], Type[SketchFamily]]:
+    def deco(cls: Type[SketchFamily]) -> Type[SketchFamily]:
+        if name in _FAMILIES and _FAMILIES[name] is not cls:
+            raise ValueError(f"sketch family {name!r} already registered")
+        cls.name = name
+        _FAMILIES[name] = cls
+        return cls
+    return deco
+
+
+def get(name: str, cfg: OverSketchConfig, **kwargs) -> SketchFamily:
+    """Instantiate family ``name`` with the shared dimension config."""
+    try:
+        cls = _FAMILIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown sketch family {name!r}; available: {available()}"
+        ) from None
+    return cls(cfg=cfg, **kwargs)
+
+
+def available() -> list:
+    return sorted(_FAMILIES)
