@@ -46,6 +46,7 @@ def run(quick: bool = True):
         rows.append({
             "name": f"fig10_{name}",
             "us": (t if t != float("inf") else h["time"][-1]) * 1e6,
-            "derived": f"t_to_target={t:.2f};final_f={h['fval'][-1]:.5f}",
+            "derived": (f"t_to_target={t:.2f};final_f={h['fval'][-1]:.5f};"
+                        f"usd={h['cost'][-1]:.4f}"),
         })
     return rows

@@ -1,0 +1,69 @@
+"""Fleet-engine sweep: fleet size x failure rate x termination policy.
+
+Every cell runs the same fixed workload (a few distributed rounds at a
+fixed per-worker flop count) through ``repro.runtime.FleetEngine`` via the
+SimClock facade and reports simulated seconds *and* simulated dollars —
+the time-vs-cost Pareto data that the fig10/fig12 comparisons sit on.
+One extra row self-checks trace record/replay bit-exactness.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+
+from benchmarks.common import json_row
+from repro.core.straggler import SimClock, StragglerModel
+from repro.runtime import (FleetConfig, TraceRecorder, available_policies,
+                           load_trace)
+
+ROUNDS = 5
+FLOPS_PER_WORKER = 4e5        # ~0.2 s of work at the default throughput
+
+
+def _run_cell(num_workers: int, failure_rate: float, policy: str,
+              recorder=None, replay=None) -> SimClock:
+    fleet = FleetConfig(failure_rate=failure_rate, cold_start_prob=0.1)
+    clock = SimClock(StragglerModel(p_tail=0.05, tail_hi=3.0), fleet=fleet,
+                     recorder=recorder, replay=replay)
+    k = max(1, int(0.8 * num_workers))
+    for r in range(ROUNDS):
+        clock.phase(jax.random.PRNGKey(1000 * num_workers + r), num_workers,
+                    policy=policy, k=k,
+                    flops_per_worker=FLOPS_PER_WORKER, comm_units=1.0)
+    return clock
+
+
+def run(quick: bool = True):
+    sizes = (32, 128) if quick else (32, 128, 512)
+    failure_rates = (0.0, 0.05) if quick else (0.0, 0.05, 0.2)
+    rows = []
+    for n in sizes:
+        for f in failure_rates:
+            for policy in available_policies():
+                clock = _run_cell(n, f, policy)
+                rows.append(json_row(
+                    f"fleet_n{n}_fail{int(100 * f)}_{policy}",
+                    clock.time * 1e6,
+                    sim_s=clock.time, usd=clock.dollars,
+                    invocations=clock.ledger.invocations,
+                    gb_s=clock.ledger.gb_seconds))
+
+    # Record/replay self-check: one cell recorded, replayed, compared.
+    rec = TraceRecorder()
+    recorded = _run_cell(64, 0.1, "k_of_n", recorder=rec)
+    with tempfile.NamedTemporaryFile("w", suffix=".jsonl",
+                                     delete=False) as tmp:
+        path = tmp.name
+    try:
+        rec.dump(path)
+        replayed = _run_cell(64, 0.1, "k_of_n", replay=load_trace(path))
+        exact = int(replayed.time == recorded.time
+                    and replayed.dollars == recorded.dollars)
+    finally:
+        os.unlink(path)
+    rows.append(json_row("fleet_trace_replay", recorded.time * 1e6,
+                         sim_s=recorded.time, usd=recorded.dollars,
+                         replay_exact=exact))
+    return rows

@@ -21,6 +21,7 @@ MODULES = [
     "fig10_coded_vs_spec",
     "fig11_first_order",
     "fig12_serverful",
+    "fleet_bench",
     "kernels_bench",
     "roofline",
 ]

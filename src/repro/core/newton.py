@@ -83,6 +83,10 @@ class NewtonConfig:
     # system and the master averages (debiased) directions — needs
     # block_size > d to be well-posed.
     sketch_mode: str = "blocks"
+    # distributed-avg per-block d x d solver: chol (dense Cholesky) | cg
+    # (matvec-only conjugate gradient, cg_iters steps — for d beyond
+    # master-factorization scale).
+    distavg_solver: str = "chol"
     coded_block_rows: int = 256
     seed: int = 0
     use_kernels: bool = False       # route sketch through repro.kernels ops
@@ -139,26 +143,16 @@ class CodedMatvecEngine:
         erased = None
         if self.model is not None and policy == "coded":
             # Faithful master: results stream in; decode starts as soon as
-            # the arrived set is peelable (paper Alg. 1 step 8).
-            times = np.asarray(self.model.sample_times(
-                key, w, flops_per_worker=flops))
-            order = np.argsort(times)
+            # the arrived set is peelable (paper Alg. 1 step 8).  The
+            # streaming wait runs through the fleet engine's coded_decode
+            # policy with the peeling-feasibility predicate.
             g1 = code.grid + 1
             k_min = max(1, w - (2 * code.grid + 1))
-            elapsed = times[order[-1]]
-            chosen = w
-            for k in range(k_min, w + 1):
-                mask = np.zeros(w, bool)
-                mask[order[:k]] = True
-                if _decodable(mask.reshape(g1, g1)):
-                    elapsed = times[order[k - 1]]
-                    chosen = k
-                    break
-            mask = np.zeros(w, bool)
-            mask[order[:chosen]] = True
-            clock.charge(float(elapsed) +
-                         self.model.comm_per_unit * 1.0)
-            erased = jnp.asarray(~mask).reshape(g1, g1)
+            _, mask = clock.phase(
+                key, w, policy="coded_decode", k=k_min,
+                flops_per_worker=flops, comm_units=1.0,
+                decodable=lambda m: _decodable(~m.reshape(g1, g1)))
+            erased = jnp.asarray(~np.asarray(mask)).reshape(g1, g1)
         elif self.model is not None and policy == "wait_all":
             clock.phase(key, w, policy="wait_all", flops_per_worker=flops,
                         comm_units=1.0)
@@ -216,13 +210,25 @@ def _jitted_sketched_hessian(objective, family: "sketching.SketchFamily",
 
 @functools.lru_cache(maxsize=64)
 def _jitted_distavg_direction(objective, family: "sketching.SketchFamily",
-                              debias: bool, use_kernels: bool):
+                              debias: bool, use_kernels: bool,
+                              solver: str = "chol", cg_iters: int = 64):
     """distributed-avg mode (Bartan-Pilanci 2020): every surviving block-
     worker solves its own per-block sketched system, the master averages
     the (Marchenko-Pastur debiased) directions.  Per-worker sketch rows =
     block_size, so the debias factor is 1 - d/b.  Also returns the masked
-    average of H_k g for the weakly-convex line search."""
+    average of H_k g for the weakly-convex line search.  ``solver`` picks
+    the per-block d x d solve: dense Cholesky, or matvec-only CG for d
+    beyond master-factorization scale."""
     b = family.cfg.block_size
+
+    if solver == "cg":
+        def block_solve(hk, g):
+            return solvers.conjugate_gradient(
+                lambda v: hk @ v, g, jnp.zeros_like(g), cg_iters)
+    elif solver == "chol":
+        block_solve = solvers.psd_solve
+    else:
+        raise ValueError(f"unknown distavg_solver {solver!r}")
 
     def fn(w, data, g, state, survivors):
         a = objective.hess_sqrt(w, data)
@@ -231,7 +237,7 @@ def _jitted_distavg_direction(objective, family: "sketching.SketchFamily",
         eye = jnp.eye(d, dtype=a_t.dtype)
         grams = jnp.einsum("kbd,kbe->kde", a_t, a_t) \
             + objective.hess_reg * eye
-        p_k = -jax.vmap(lambda hk: solvers.psd_solve(hk, g))(grams)
+        p_k = -jax.vmap(lambda hk: block_solve(hk, g))(grams)
         if debias:
             p_k = sketching.debias_direction(p_k, d, b)
         m = survivors.astype(a_t.dtype)
@@ -320,8 +326,10 @@ def _distavg_direction_phase(objective, data: Dataset, w: jax.Array,
         # reports apply_flops=0 (oversketch) still pays one streaming pass
         # over A on each worker.
         apply_flops = fam.apply_flops(n_rows, d) or 2.0 * n_rows * d
+        solve_flops = (d ** 3 / 3.0 if cfg.distavg_solver == "chol"
+                       else 2.0 * cfg.cg_iters * d * d)   # cg matvecs
         worker_flops = (apply_flops
-                        + 2.0 * scfg.block_size * d * d + d ** 3 / 3.0)
+                        + 2.0 * scfg.block_size * d * d + solve_flops)
         _, mask = clock.phase(key, scfg.total_blocks, policy="k_of_n",
                               k=scfg.num_blocks,
                               flops_per_worker=worker_flops,
@@ -329,7 +337,8 @@ def _distavg_direction_phase(objective, data: Dataset, w: jax.Array,
         survivors = mask
     state = fam.sample(jax.random.fold_in(key, 7), n_rows)
     fn = _jitted_distavg_direction(objective, fam, cfg.debias,
-                                   cfg.use_kernels)
+                                   cfg.use_kernels, cfg.distavg_solver,
+                                   cfg.cg_iters)
     return fn(w, data, g, state, survivors)
 
 
@@ -337,9 +346,18 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
                         cfg: NewtonConfig,
                         model: Optional[straggler.StragglerModel] = straggler.StragglerModel()
                         ) -> NewtonResult:
-    """Run OverSketched Newton; returns the iterate and a per-iteration log."""
+    """Run OverSketched Newton; returns the iterate and a per-iteration log.
+
+    ``model`` is either a ``StragglerModel`` (a fresh default fleet clock is
+    built) or a prebuilt ``straggler.SimClock`` — the way to score a run on
+    a custom fleet (cold starts, failures, trace record/replay; see
+    ``repro.runtime``).  ``history["cost"]`` logs cumulative simulated
+    dollars alongside ``history["time"]``'s simulated seconds.
+    """
     if cfg.sketch_mode not in ("blocks", "distributed-avg"):
         raise ValueError(f"unknown sketch_mode {cfg.sketch_mode!r}")
+    if cfg.distavg_solver not in ("chol", "cg"):
+        raise ValueError(f"unknown distavg_solver {cfg.distavg_solver!r}")
     if cfg.sketch_mode == "distributed-avg":
         if cfg.hessian_policy != "oversketch":
             raise ValueError(
@@ -353,12 +371,15 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
                 f"{cfg.sketch.block_size} <= d={d_hess}")
     sketching.get(cfg.sketch_family, cfg.sketch)   # fail fast on bad family
     key = jax.random.PRNGKey(cfg.seed)
-    clock = straggler.SimClock(model) if model is not None else None
+    if isinstance(model, straggler.SimClock):
+        clock, model = model, model.model
+    else:
+        clock = straggler.SimClock(model) if model is not None else None
     engine = CodedMatvecEngine(data, cfg.coded_block_rows, model)
 
     w = jnp.asarray(w0, jnp.float32)
     hist: Dict[str, List[float]] = {k: [] for k in (
-        "iter", "fval", "gnorm", "step", "time", "test_error",
+        "iter", "fval", "gnorm", "step", "time", "cost", "test_error",
         "sketch_dim")}
 
     grad_fn = jax.jit(objective.gradient)
@@ -420,6 +441,7 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
         hist["gnorm"].append(float(jnp.linalg.norm(grad_fn(w, data))))
         hist["step"].append(float(step))
         hist["time"].append(clock.time if clock is not None else float(t + 1))
+        hist["cost"].append(clock.dollars if clock is not None else 0.0)
         hist["sketch_dim"].append(live_cfg.sketch.sketch_dim)
 
         # --- adaptive sketch growth (paper Thm 3.2 remark) ------------------

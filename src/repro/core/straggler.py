@@ -6,12 +6,14 @@ per-worker job time as
 
     t_w = base * lognormal(0, body_sigma) * (1 + straggler * tail)
 
-with P[straggler] = p_tail and tail ~ U[tail_lo, tail_hi].  The *clock* turns
-per-phase worker-time samples into simulated wall time under different
-termination policies (wait-all / k-of-n / speculative re-execution), which is
-how every optimizer in this repo is scored — the container has one physical
-device, so comparisons that the paper makes in wall-clock on Lambda are made
-here in deterministic simulated seconds.
+with P[straggler] = p_tail and tail ~ U[tail_lo, tail_hi].  The *clock*
+(``SimClock``, a facade over the discrete-event ``repro.runtime`` fleet
+engine) turns per-phase worker lifecycles into simulated wall time and
+dollars under pluggable termination policies (wait_all / k_of_n /
+speculative / hedged / coded_decode), which is how every optimizer in this
+repo is scored — the container has one physical device, so comparisons the
+paper makes in wall-clock and AWS dollars on Lambda are made here in
+deterministic simulated seconds and simulated dollars.
 """
 from __future__ import annotations
 
@@ -56,6 +58,12 @@ class StragglerModel:
         return self.invoke_overhead + self.base_time * work_per_worker * body * slow
 
 
+# The production termination policies live in the ``repro.runtime.policies``
+# registry (what SimClock.phase dispatches through); the helpers below are
+# the jax-native order-statistic forms kept for direct use on sampled time
+# arrays (tests, notebooks).  ``speculative_time`` — the only nontrivial one
+# — delegates to the registry so there is a single implementation.
+
 def wait_all_time(times: jax.Array) -> jax.Array:
     """Policy: wait for every worker (uncoded baseline)."""
     return jnp.max(times)
@@ -73,54 +81,81 @@ def k_of_n_mask(times: jax.Array, k: int) -> jax.Array:
 
 def speculative_time(times: jax.Array, key: jax.Array,
                      model: StragglerModel,
-                     watch_fraction: float = 0.9) -> jax.Array:
+                     watch_fraction: float = 0.9,
+                     work_per_worker: float = 1.0,
+                     flops_per_worker: Optional[float] = None) -> jax.Array:
     """Policy: speculative execution (paper Sec. 5.3).
 
     Wait for ``watch_fraction`` of workers, then re-launch the stragglers and
     take min(original finish, deadline + relaunch finish) per straggler.
+    Relaunches redo the phase's *actual* work (``work_per_worker`` /
+    ``flops_per_worker`` must match what produced ``times``) — the historical
+    default of unit work made relaunched stragglers finish unrealistically
+    fast, flattering every speculative baseline.
     """
+    from repro.runtime import policies as rt_policies   # lazy: imports us
+    import numpy as np
     n = times.shape[0]
-    k = jnp.maximum(1, jnp.floor(watch_fraction * n).astype(jnp.int32))
-    deadline = jnp.sort(times)[k - 1]
-    relaunch = model.sample_times(key, n)
-    effective = jnp.where(times <= deadline, times,
-                          jnp.minimum(times, deadline + relaunch))
-    return jnp.max(effective)
+    ctx = rt_policies.PhaseContext(
+        watch_fraction=watch_fraction,
+        sample_relaunch=lambda: np.asarray(
+            model.sample_times(key, n, work_per_worker, flops_per_worker),
+            dtype=np.float64))
+    out = rt_policies.get_policy("speculative")(
+        np.asarray(times, dtype=np.float64), ctx)
+    return jnp.asarray(out.elapsed)
 
 
-@dataclasses.dataclass
 class SimClock:
-    """Accumulates simulated wall time across distributed phases."""
+    """Simulated wall time (and dollars) across distributed phases.
 
-    model: StragglerModel
-    time: float = 0.0
+    Thin facade over ``repro.runtime.FleetEngine`` — the discrete-event
+    fleet simulator with per-worker lifecycle (cold start / failure-retry),
+    the termination-policy registry, cost accounting, and trace
+    record/replay.  The historical ``phase()``/``charge()``/``time`` API is
+    preserved so optimizer call sites are unchanged; richer behaviour is
+    opted into via the keyword-only constructor args (see
+    ``runtime/README.md``).
+    """
+
+    def __init__(self, model: StragglerModel, time: float = 0.0, *,
+                 fleet=None, cost=None, recorder=None, replay=None):
+        from repro.runtime import FleetEngine   # lazy: runtime imports us
+        self.engine = FleetEngine(model, fleet=fleet, cost=cost,
+                                  recorder=recorder, replay=replay)
+        if time:
+            self.engine.seconds += float(time)
+
+    @property
+    def model(self) -> StragglerModel:
+        return self.engine.model
+
+    @property
+    def time(self) -> float:
+        return self.engine.seconds
+
+    @property
+    def dollars(self) -> float:
+        return self.engine.dollars
+
+    @property
+    def ledger(self):
+        return self.engine.ledger
 
     def charge(self, elapsed: float) -> None:
         """Directly add externally-computed phase time (e.g. the coded
         master's wait-until-decodable simulation)."""
-        self.time = self.time + float(elapsed)
+        self.engine.charge(elapsed)
 
     def phase(self, key: jax.Array, num_workers: int, *,
               work_per_worker: float = 1.0,
               flops_per_worker: Optional[float] = None,
               policy: str = "wait_all", k: Optional[int] = None,
-              comm_units: float = 0.0) -> Tuple[jax.Array, jax.Array]:
+              comm_units: float = 0.0,
+              decodable=None) -> Tuple[float, jax.Array]:
         """Simulate one phase; returns (elapsed, finished_mask)."""
-        ktime, kspec = jax.random.split(key)
-        times = self.model.sample_times(ktime, num_workers, work_per_worker,
-                                        flops_per_worker)
-        if policy == "wait_all":
-            elapsed = wait_all_time(times)
-            mask = jnp.ones((num_workers,), dtype=bool)
-        elif policy == "k_of_n":
-            assert k is not None
-            elapsed = k_of_n_time(times, k)
-            mask = k_of_n_mask(times, k)
-        elif policy == "speculative":
-            elapsed = speculative_time(times, kspec, self.model)
-            mask = jnp.ones((num_workers,), dtype=bool)
-        else:
-            raise ValueError(f"unknown policy {policy}")
-        elapsed = elapsed + self.model.comm_per_unit * comm_units
-        self.time = self.time + float(elapsed)
-        return elapsed, mask
+        elapsed, mask = self.engine.run_phase(
+            key, num_workers, work_per_worker=work_per_worker,
+            flops_per_worker=flops_per_worker, policy=policy, k=k,
+            comm_units=comm_units, decodable=decodable)
+        return elapsed, jnp.asarray(mask)

@@ -80,7 +80,10 @@ def first_order(objective, data: Dataset, w0: jax.Array,
                 model: Optional[straggler.StragglerModel] = straggler.StragglerModel()
                 ) -> Dict[str, List[float]]:
     key = jax.random.PRNGKey(cfg.seed)
-    clock = straggler.SimClock(model) if model is not None else None
+    if isinstance(model, straggler.SimClock):
+        clock, model = model, model.model
+    else:
+        clock = straggler.SimClock(model) if model is not None else None
     n = data.x.shape[0]
     shard_of_row = _worker_shards(n, cfg.num_workers)
 
@@ -90,7 +93,7 @@ def first_order(objective, data: Dataset, w0: jax.Array,
         lambda wv, ok: _masked_gradient(objective, data, wv, shard_of_row, ok))
 
     hist: Dict[str, List[float]] = {k: [] for k in (
-        "iter", "fval", "gnorm", "step", "time", "test_error")}
+        "iter", "fval", "gnorm", "step", "time", "cost", "test_error")}
     w = jnp.asarray(w0, jnp.float32)
     velocity = jnp.zeros_like(w)
     d = data.x.shape[1]
@@ -149,6 +152,7 @@ def first_order(objective, data: Dataset, w0: jax.Array,
         hist["gnorm"].append(float(jnp.linalg.norm(grad_fn(w, data))))
         hist["step"].append(float(step))
         hist["time"].append(clock.time if clock is not None else float(t + 1))
+        hist["cost"].append(clock.dollars if clock is not None else 0.0)
         if cfg.track_test_error and data.x_test is not None:
             hist["test_error"].append(
                 float(objective.error(w, data.x_test, data.y_test)))

@@ -43,9 +43,15 @@ def _shard_bounds(n: int, w: int):
 def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
           model: Optional[straggler.StragglerModel] = straggler.StragglerModel()
           ) -> Dict[str, List[float]]:
-    """Runs GIANT; requires objective.hess_sqrt + gradient on sub-datasets."""
+    """Runs GIANT; requires objective.hess_sqrt + gradient on sub-datasets.
+
+    ``model`` may also be a prebuilt ``straggler.SimClock`` (custom fleet /
+    cost / trace config, see ``repro.runtime``)."""
     key = jax.random.PRNGKey(cfg.seed)
-    clock = straggler.SimClock(model) if model is not None else None
+    if isinstance(model, straggler.SimClock):
+        clock = model
+    else:
+        clock = straggler.SimClock(model) if model is not None else None
     n, d = data.x.shape
     bounds = _shard_bounds(n, cfg.num_workers)
 
@@ -79,7 +85,7 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
     grad_fn = jax.jit(objective.gradient)
 
     hist: Dict[str, List[float]] = {k: [] for k in (
-        "iter", "fval", "gnorm", "step", "time", "test_error")}
+        "iter", "fval", "gnorm", "step", "time", "cost", "test_error")}
     w = jnp.asarray(w0, jnp.float32)
 
     grad_flops = 2.0 * per * d                    # local gradient pass
@@ -142,6 +148,7 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
         hist["gnorm"].append(float(jnp.linalg.norm(grad_fn(w, data))))
         hist["step"].append(float(step))
         hist["time"].append(clock.time if clock is not None else float(t + 1))
+        hist["cost"].append(clock.dollars if clock is not None else 0.0)
         if cfg.track_test_error and data.x_test is not None:
             hist["test_error"].append(
                 float(objective.error(w, data.x_test, data.y_test)))

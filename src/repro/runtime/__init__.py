@@ -1,0 +1,28 @@
+"""Serverless runtime engine: discrete-event fleet simulation with cost
+accounting, a termination-policy registry, and trace record/replay.
+
+This package is the substrate every optimizer in the repo is scored on.
+``core.straggler.SimClock`` is a thin facade over ``FleetEngine`` (same
+``phase()``/``charge()`` API), so optimizer call sites are unchanged while
+every run now reports simulated seconds *and* simulated dollars.
+
+See ``src/repro/runtime/README.md`` for the event model, the cost-model
+constants, and the trace JSONL schema.
+"""
+from repro.runtime.cost import CostLedger, CostModel, bill_phase
+from repro.runtime.engine import FleetConfig, FleetEngine
+from repro.runtime.policies import (PhaseContext, PhaseOutcome,
+                                    available_policies, get_policy,
+                                    register_policy)
+from repro.runtime.trace import (TraceRecorder, TraceReplayer,
+                                 calibrate_from_times, calibrate_from_trace,
+                                 load_trace)
+
+__all__ = [
+    "CostLedger", "CostModel", "bill_phase",
+    "FleetConfig", "FleetEngine",
+    "PhaseContext", "PhaseOutcome", "available_policies", "get_policy",
+    "register_policy",
+    "TraceRecorder", "TraceReplayer", "calibrate_from_times",
+    "calibrate_from_trace", "load_trace",
+]

@@ -1,0 +1,225 @@
+"""Discrete-event serverless fleet engine.
+
+``FleetEngine`` is the single substrate every optimizer in this repo is
+scored on.  One ``run_phase`` call simulates one distributed round:
+
+  1. Each worker is launched (one LAUNCH event at t=0).  An attempt may hit
+     a **cold start** (probability ``cold_start_prob``, extra U[lo, hi]
+     delay), then runs for a duration drawn from the calibrated
+     ``StragglerModel`` (body x tail, Fig. 1 shape).
+  2. An attempt may **fail** mid-run (probability ``failure_rate``); the
+     master detects the failure and schedules a retry LAUNCH after
+     ``retry_backoff``.  The attempt at index ``max_retries`` always
+     succeeds — serverless masters relaunch until the result lands.
+  3. When every worker's lifecycle has resolved, the phase's
+     **termination policy** (``runtime.policies`` registry) decides the
+     master's wait time and result mask, possibly adding relaunch attempts
+     of its own (speculative / hedged).
+  4. Every attempt — retries, hedges, k-of-n losers — is billed through the
+     ``CostModel`` (GB-seconds + invocation + S3 ops), and the phase is
+     appended to the trace recorder if one is attached.
+
+Determinism: all run durations come from ``model.sample_times`` under keys
+folded from the phase key, and all lifecycle coin flips come from a numpy
+``Generator`` seeded from the same key — identical seeds give bit-identical
+``(seconds, dollars)``, which is what makes trace replay exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.runtime import policies as _policies
+from repro.runtime.cost import CostLedger, CostModel, bill_phase
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Worker-lifecycle knobs layered on the calibrated StragglerModel.
+
+    Defaults are all-off so the engine reproduces the pure order-statistic
+    clock the optimizers were originally scored on; benchmarks and tests
+    turn the lifecycle on explicitly (``fleet_bench`` sweeps these).
+    """
+
+    cold_start_prob: float = 0.0   # P[attempt hits a cold container]
+    cold_start_lo: float = 0.5     # cold-start delay bounds, seconds
+    cold_start_hi: float = 2.0
+    failure_rate: float = 0.0      # P[attempt dies mid-run]
+    max_retries: int = 3           # retry at this index always succeeds
+    retry_backoff: float = 0.05    # master detection + relaunch delay
+    watch_fraction: float = 0.9    # speculative policy watch deadline
+    hedge_quantile: float = 0.8    # hedged policy duplicate launch point
+
+
+def _np_rng(key: jax.Array) -> np.random.Generator:
+    """Numpy generator deterministically derived from a jax PRNG key."""
+    try:
+        data = jax.random.key_data(key)
+    except (AttributeError, TypeError):
+        data = key
+    return np.random.default_rng(
+        np.asarray(data, dtype=np.uint32).ravel().tolist())
+
+
+class FleetEngine:
+    """Accumulates simulated seconds *and* dollars across phases."""
+
+    def __init__(self, model, fleet: Optional[FleetConfig] = None,
+                 cost: Optional[CostModel] = None,
+                 recorder=None, replay=None):
+        self.model = model
+        self.fleet = fleet if fleet is not None else FleetConfig()
+        self.cost_model = cost if cost is not None else CostModel()
+        self.ledger = CostLedger()
+        self.seconds = 0.0
+        self.recorder = recorder
+        self.replay = replay
+        self._phase_idx = 0
+
+    # ------------------------------------------------------------- totals
+    @property
+    def dollars(self) -> float:
+        return self.ledger.dollars(self.cost_model)
+
+    def charge(self, elapsed: float) -> None:
+        """Add externally-computed phase time (no workers billed)."""
+        if self.replay is not None:
+            elapsed = self.replay.next_charge()
+        elapsed = float(elapsed)
+        self.seconds += elapsed
+        if self.recorder is not None:
+            self.recorder.record_charge(self._phase_idx, elapsed)
+        self._phase_idx += 1
+
+    # ----------------------------------------------------- lifecycle core
+    def _lifecycle(self, key: jax.Array, rng: np.random.Generator,
+                   num_workers: int, work_per_worker: float,
+                   flops_per_worker: Optional[float]
+                   ) -> Tuple[np.ndarray, List[Tuple[float, float]], int]:
+        """Event-driven per-worker lifecycle: cold start -> running ->
+        done | failed-with-retry.  Returns (completion_times, attempts,
+        successes); ``attempts`` are (launch, end) pairs for billing."""
+        fl = self.fleet
+        round_times: dict = {}
+
+        def duration(worker: int, attempt: int) -> float:
+            # One jax sample round per retry wave, lazily — the common
+            # failure-free case costs exactly one sample_times call.
+            if attempt not in round_times:
+                k = jax.random.fold_in(key, attempt)
+                round_times[attempt] = np.asarray(
+                    self.model.sample_times(k, num_workers, work_per_worker,
+                                            flops_per_worker),
+                    dtype=np.float64)
+            return float(round_times[attempt][worker])
+
+        done = np.full(num_workers, np.inf)
+        attempts: List[Tuple[float, float]] = []
+        successes = 0
+        events: list = []   # (time, seq, worker, attempt)
+        for w in range(num_workers):
+            heapq.heappush(events, (0.0, w, w, 0))
+        seq = num_workers
+        while events:
+            t, _, w, attempt = heapq.heappop(events)
+            cold = (fl.cold_start_prob > 0.0
+                    and rng.random() < fl.cold_start_prob)
+            t_cold = (rng.uniform(fl.cold_start_lo, fl.cold_start_hi)
+                      if cold else 0.0)
+            run = duration(w, attempt)
+            fails = (attempt < fl.max_retries and fl.failure_rate > 0.0
+                     and rng.random() < fl.failure_rate)
+            if fails:
+                # Dies partway through; master notices and relaunches.
+                t_fail = t + t_cold + rng.uniform(0.05, 0.95) * run
+                attempts.append((t, t_fail))
+                heapq.heappush(
+                    events, (t_fail + fl.retry_backoff, seq, w, attempt + 1))
+                seq += 1
+            else:
+                end = t + t_cold + run
+                attempts.append((t, end))
+                successes += 1
+                done[w] = end
+        return done, attempts, successes
+
+    # ------------------------------------------------------------- phases
+    def run_phase(self, key: jax.Array, num_workers: int, *,
+                  work_per_worker: float = 1.0,
+                  flops_per_worker: Optional[float] = None,
+                  policy: str = "wait_all", k: Optional[int] = None,
+                  comm_units: float = 0.0,
+                  decodable: Optional[Callable[[np.ndarray], bool]] = None
+                  ) -> Tuple[float, np.ndarray]:
+        """Simulate one distributed phase; returns (elapsed, finished_mask).
+
+        ``elapsed`` includes the master-side communication charge
+        (``comm_per_unit * comm_units``), matching the historical SimClock
+        accounting; the cost ledger bills workers and comm separately.
+        """
+        if self.replay is not None:
+            elapsed, mask, entry = self.replay.next_phase(
+                policy=policy, num_workers=num_workers)
+            self.seconds += elapsed
+            self.ledger.add(entry)
+            self._phase_idx += 1
+            return elapsed, mask
+
+        rng = _np_rng(key)
+        done, attempts, successes = self._lifecycle(
+            key, rng, num_workers, work_per_worker, flops_per_worker)
+
+        relaunch_cache: dict = {}
+
+        def sample_relaunch() -> np.ndarray:
+            # Duplicates live in the same fleet as originals: they can hit
+            # cold containers and they can die (duration inf — the original
+            # copy then wins; min() in the policy handles it).
+            if "r" not in relaunch_cache:
+                fl = self.fleet
+                kr = jax.random.fold_in(key, 7777)
+                run = np.asarray(
+                    self.model.sample_times(kr, num_workers, work_per_worker,
+                                            flops_per_worker),
+                    dtype=np.float64)
+                if fl.cold_start_prob > 0.0:
+                    cold = rng.random(num_workers) < fl.cold_start_prob
+                    run = run + cold * rng.uniform(
+                        fl.cold_start_lo, fl.cold_start_hi, num_workers)
+                if fl.failure_rate > 0.0:
+                    run = np.where(rng.random(num_workers) < fl.failure_rate,
+                                   np.inf, run)
+                relaunch_cache["r"] = run
+            return relaunch_cache["r"]
+
+        ctx = _policies.PhaseContext(
+            k=k, watch_fraction=self.fleet.watch_fraction,
+            hedge_quantile=self.fleet.hedge_quantile,
+            decodable=decodable, sample_relaunch=sample_relaunch)
+        outcome = _policies.get_policy(policy)(done, ctx)
+
+        elapsed = float(outcome.elapsed
+                        + self.model.comm_per_unit * comm_units)
+        all_attempts = attempts + list(outcome.extra_attempts)
+        entry = bill_phase(self.cost_model, all_attempts,
+                           successes + outcome.extra_successes,
+                           comm_units)
+        if self.cost_model.billing == "reserved":
+            # Fixed cluster: every node bills the phase's wall-clock
+            # (idle-behind-the-straggler time included), not its own work.
+            entry.gb_seconds = (self.cost_model.memory_gb * num_workers
+                                * elapsed)
+        self.seconds += elapsed
+        self.ledger.add(entry)
+        if self.recorder is not None:
+            self.recorder.record_phase(
+                self._phase_idx, policy=policy, num_workers=num_workers,
+                k=k, elapsed=elapsed, mask=np.asarray(outcome.mask, bool),
+                entry=entry, worker_times=done)
+        self._phase_idx += 1
+        return elapsed, np.asarray(outcome.mask, dtype=bool)

@@ -1,0 +1,161 @@
+"""Fleet trace record / replay + empirical calibration.
+
+A trace is a JSONL phase log.  Two row kinds:
+
+  {"kind": "phase", "phase": 0, "policy": "k_of_n", "workers": 24, "k": 20,
+   "elapsed": 1.23, "mask": "fffff0", "gb_seconds": 93.1, "invocations": 31,
+   "s3_puts": 25.0, "s3_gets": 63.0, "worker_times": [...optional...]}
+  {"kind": "charge", "phase": 1, "elapsed": 0.57}
+
+``mask`` is the finished-worker bitmask, big-endian bit-packed and
+hex-encoded (worker 0 = MSB of the first byte).  Floats are serialized via
+``repr`` (json default), which round-trips IEEE doubles exactly — replaying
+a recorded run reproduces bit-identical ``(seconds, dollars)`` totals.
+
+``worker_times`` (opt-in, ``TraceRecorder(worker_times=True)``) stores the
+per-worker completion times of each phase; ``calibrate_from_trace`` fits a
+``StragglerModel`` to their empirical shape (median base, lognormal body
+spread, tail fraction and span — the paper's Fig. 1 statistics), closing
+the loop from a recorded fleet back to a simulator that reproduces it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.straggler import StragglerModel
+from repro.runtime.cost import CostLedger
+
+
+def _mask_to_hex(mask: np.ndarray) -> str:
+    return np.packbits(np.asarray(mask, dtype=np.uint8)).tobytes().hex()
+
+
+def _mask_from_hex(s: str, n: int) -> np.ndarray:
+    bits = np.unpackbits(np.frombuffer(bytes.fromhex(s), dtype=np.uint8))
+    return bits[:n].astype(bool)
+
+
+@dataclasses.dataclass
+class TraceRecorder:
+    """Collects phase rows; ``dump`` writes JSONL."""
+
+    worker_times: bool = False
+    rows: List[dict] = dataclasses.field(default_factory=list)
+
+    def record_phase(self, phase: int, *, policy: str, num_workers: int,
+                     k: Optional[int], elapsed: float, mask: np.ndarray,
+                     entry: CostLedger,
+                     worker_times: Optional[np.ndarray] = None) -> None:
+        row = {"kind": "phase", "phase": phase, "policy": policy,
+               "workers": int(num_workers), "k": k,
+               "elapsed": float(elapsed), "mask": _mask_to_hex(mask)}
+        row.update(entry.as_dict())
+        if self.worker_times and worker_times is not None:
+            row["worker_times"] = [float(t) for t in worker_times]
+        self.rows.append(row)
+
+    def record_charge(self, phase: int, elapsed: float) -> None:
+        self.rows.append({"kind": "charge", "phase": phase,
+                          "elapsed": float(elapsed)})
+
+    def dump(self, path) -> None:
+        with open(path, "w") as f:
+            for row in self.rows:
+                f.write(json.dumps(row) + "\n")
+
+
+class TraceReplayer:
+    """Replays a recorded trace row-by-row; the engine consumes one row per
+    phase()/charge() call and re-applies the recorded time and cost, so a
+    replayed run is bit-identical to the recording."""
+
+    def __init__(self, rows: List[dict]):
+        self.rows = list(rows)
+        self._i = 0
+
+    def _next(self, kind: str) -> dict:
+        if self._i >= len(self.rows):
+            raise ValueError(f"trace exhausted at row {self._i} "
+                             f"(wanted a {kind!r} row)")
+        row = self.rows[self._i]
+        if row["kind"] != kind:
+            raise ValueError(f"trace row {self._i} is {row['kind']!r}, "
+                             f"run wanted {kind!r} — phase structure drifted")
+        self._i += 1
+        return row
+
+    def next_phase(self, *, policy: str, num_workers: int
+                   ) -> Tuple[float, np.ndarray, CostLedger]:
+        row = self._next("phase")
+        if row["policy"] != policy or row["workers"] != num_workers:
+            raise ValueError(
+                f"trace row {self._i - 1} recorded "
+                f"({row['policy']!r}, {row['workers']} workers), run asked "
+                f"({policy!r}, {num_workers}) — not the same schedule")
+        entry = CostLedger(gb_seconds=row["gb_seconds"],
+                           invocations=row["invocations"],
+                           s3_puts=row["s3_puts"], s3_gets=row["s3_gets"])
+        return row["elapsed"], _mask_from_hex(row["mask"], num_workers), entry
+
+    def next_charge(self) -> float:
+        return self._next("charge")["elapsed"]
+
+
+def load_trace(path) -> TraceReplayer:
+    with open(path) as f:
+        rows = [json.loads(line) for line in f if line.strip()]
+    return TraceReplayer(rows)
+
+
+# --------------------------------------------------------------- calibration
+def calibrate_from_times(times, tail_cut: float = 1.25) -> StragglerModel:
+    """Fit a StragglerModel to empirical per-worker job times (Fig. 1 shape).
+
+    Workers above ``tail_cut`` x median are stragglers: their fraction gives
+    ``p_tail`` and their span the tail bounds; the body's log-spread around
+    the median gives ``body_sigma``.  Invocation overhead is not separable
+    from a bare completion-time histogram, so it calibrates to 0.
+    """
+    t = np.asarray(times, dtype=np.float64).ravel()
+    if t.size == 0 or not np.all(t > 0):
+        raise ValueError("calibration needs positive per-worker times")
+    med = float(np.median(t))
+    body = t[t <= tail_cut * med]
+    tail = t[t > tail_cut * med]
+    sigma = float(np.std(np.log(body / med))) if body.size > 1 else 0.05
+    p_tail = float(tail.size / t.size)
+    if tail.size:
+        tail_lo = max(0.05, float(tail.min() / med - 1.0))
+        tail_hi = max(tail_lo + 0.05, float(tail.max() / med - 1.0))
+    else:
+        tail_lo, tail_hi = 0.3, 1.5
+    return StragglerModel(base_time=med, body_sigma=max(sigma, 1e-3),
+                          p_tail=p_tail, tail_lo=tail_lo, tail_hi=tail_hi,
+                          invoke_overhead=0.0)
+
+
+def calibrate_from_trace(path, tail_cut: float = 1.25) -> StragglerModel:
+    """Pool every recorded phase's ``worker_times`` (normalized per phase so
+    phases with different work mix) and fit the pooled shape."""
+    with open(path) as f:
+        rows = [json.loads(line) for line in f if line.strip()]
+    pooled, medians = [], []
+    for row in rows:
+        wt = row.get("worker_times")
+        if not wt:
+            continue
+        wt = np.asarray(wt, dtype=np.float64)
+        med = float(np.median(wt))
+        if med > 0:
+            pooled.append(wt / med)
+            medians.append(med)
+    if not pooled:
+        raise ValueError(f"no worker_times rows in {path}; record with "
+                         "TraceRecorder(worker_times=True)")
+    scale = float(np.mean(medians))   # representative per-phase base time
+    return calibrate_from_times(np.concatenate(pooled) * scale,
+                                tail_cut=tail_cut)

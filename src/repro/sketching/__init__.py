@@ -16,10 +16,11 @@ from repro.sketching.srht import SRHTFamily
 from repro.sketching.sjlt import SJLTFamily
 from repro.sketching.gaussian import GaussianFamily
 from repro.sketching.nystrom import NystromFamily
+from repro.sketching.leverage import LeverageFamily
 
 __all__ = [
     "SketchFamily", "available", "get", "register",
     "debias_direction", "mp_factor", "next_pow2",
     "OverSketchFamily", "SRHTFamily", "SJLTFamily", "GaussianFamily",
-    "NystromFamily",
+    "NystromFamily", "LeverageFamily",
 ]

@@ -1,0 +1,228 @@
+"""Runtime fleet engine: policy registry semantics, lifecycle (cold start /
+failure-retry) accounting, cost monotonicity, trace record/replay
+bit-exactness, empirical calibration, and Newton-under-failures
+convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Dataset, LogisticRegression, NewtonConfig,
+                        OverSketchConfig, oversketched_newton)
+from repro.core.straggler import SimClock, StragglerModel
+from repro.runtime import (CostModel, FleetConfig, TraceRecorder,
+                           available_policies, calibrate_from_times,
+                           load_trace)
+
+POLICIES = ("coded_decode", "hedged", "k_of_n", "speculative", "wait_all")
+
+
+def _logistic(key, n=1200, d=20):
+    kx, kw, ky = jax.random.split(key, 3)
+    x = jax.random.uniform(kx, (n, d), minval=-1, maxval=1)
+    wstar = jax.random.normal(kw, (d,))
+    y = jnp.where(jax.random.uniform(ky, (n,)) < jax.nn.sigmoid(x @ wstar),
+                  1.0, -1.0)
+    return Dataset(x=x, y=y)
+
+
+# ----------------------------------------------------------------- registry
+def test_all_five_policies_registered():
+    assert set(POLICIES) <= set(available_policies())
+
+
+def test_every_policy_runs_through_the_engine():
+    for policy in POLICIES:
+        clock = SimClock(StragglerModel())
+        e, mask = clock.phase(jax.random.PRNGKey(1), 16, policy=policy, k=12)
+        assert float(e) > 0
+        assert mask.shape == (16,)
+        assert clock.time == float(e)
+        assert clock.dollars > 0
+
+
+def test_unknown_policy_raises():
+    clock = SimClock(StragglerModel())
+    with pytest.raises(ValueError, match="unknown policy"):
+        clock.phase(jax.random.PRNGKey(0), 8, policy="bogus")
+
+
+# ------------------------------------------------------------ policy sanity
+def test_k_of_n_no_slower_than_wait_all():
+    for seed in range(5):
+        key = jax.random.PRNGKey(seed)
+        e_all, _ = SimClock(StragglerModel(p_tail=0.1)).phase(
+            key, 64, policy="wait_all")
+        e_k, _ = SimClock(StragglerModel(p_tail=0.1)).phase(
+            key, 64, policy="k_of_n", k=48)
+        assert float(e_k) <= float(e_all) + 1e-9
+
+
+def test_coded_decode_waits_for_required_worker():
+    """A predicate that demands one specific straggler forces the wait."""
+    key = jax.random.PRNGKey(3)
+    clock = SimClock(StragglerModel(p_tail=0.3, tail_hi=3.0))
+    need = 13
+    e, mask = clock.phase(key, 16, policy="coded_decode", k=1,
+                          decodable=lambda m: bool(m[need]))
+    assert bool(mask[need])
+
+
+def test_cost_monotone_in_fleet_size():
+    def dollars(n):
+        clock = SimClock(StragglerModel())
+        clock.phase(jax.random.PRNGKey(0), n, policy="wait_all",
+                    flops_per_worker=1e5)
+        return clock.dollars
+    d = [dollars(n) for n in (8, 32, 128)]
+    assert d[0] < d[1] < d[2]
+
+
+def test_speculative_and_hedged_bill_extra_attempts():
+    """Relaunch/duplicate attempts show up as extra invocations."""
+    model = StragglerModel(p_tail=0.3, tail_lo=3.0, tail_hi=6.0)
+    key = jax.random.PRNGKey(5)
+    base = SimClock(model)
+    base.phase(key, 64, policy="wait_all")
+    for policy in ("speculative", "hedged"):
+        clock = SimClock(model)
+        clock.phase(key, 64, policy=policy)
+        assert clock.ledger.invocations > base.ledger.invocations, policy
+
+
+# ---------------------------------------------------------------- lifecycle
+def test_cold_starts_slow_the_phase():
+    key = jax.random.PRNGKey(7)
+    warm = SimClock(StragglerModel(body_sigma=0.01, p_tail=0.0))
+    cold = SimClock(StragglerModel(body_sigma=0.01, p_tail=0.0),
+                    fleet=FleetConfig(cold_start_prob=1.0,
+                                      cold_start_lo=1.0, cold_start_hi=2.0))
+    e_warm, _ = warm.phase(key, 32, policy="wait_all")
+    e_cold, _ = cold.phase(key, 32, policy="wait_all")
+    assert float(e_cold) >= float(e_warm) + 1.0
+
+
+def test_failure_retry_bills_every_attempt():
+    """failure_rate=1 forces max_retries failures per worker before the
+    guaranteed-success attempt: (max_retries + 1) invocations each."""
+    n, retries = 16, 2
+    clock = SimClock(StragglerModel(),
+                     fleet=FleetConfig(failure_rate=1.0, max_retries=retries))
+    e, mask = clock.phase(jax.random.PRNGKey(9), n, policy="wait_all")
+    assert clock.ledger.invocations == n * (retries + 1)
+    assert bool(np.asarray(mask).all())
+    ok = SimClock(StragglerModel())
+    e_ok, _ = ok.phase(jax.random.PRNGKey(9), n, policy="wait_all")
+    assert float(e) > float(e_ok)   # retries cost wall time too
+
+
+def test_newton_converges_under_failures_and_cold_starts():
+    data = _logistic(jax.random.PRNGKey(11))
+    obj = LogisticRegression(lam=1e-4)
+    cfg = NewtonConfig(iters=8, sketch=OverSketchConfig(512, 64, 0.25),
+                       coded_block_rows=128)
+    clock = SimClock(StragglerModel(),
+                     fleet=FleetConfig(failure_rate=0.15,
+                                       cold_start_prob=0.25))
+    res = oversketched_newton(obj, data, jnp.zeros(data.x.shape[1]), cfg,
+                              model=clock)
+    assert res.history["gnorm"][-1] < 1e-3
+    assert res.history["time"] == sorted(res.history["time"])
+    assert res.history["cost"] == sorted(res.history["cost"])
+    # The same run on a failure-free fleet is strictly faster.
+    res0 = oversketched_newton(obj, data, jnp.zeros(data.x.shape[1]), cfg)
+    assert res0.history["time"][-1] < res.history["time"][-1]
+
+
+# ------------------------------------------------------------ record/replay
+def test_phase_replay_is_bit_exact(tmp_path):
+    def drive(clock):
+        for s in range(4):
+            clock.phase(jax.random.PRNGKey(s), 24, policy="k_of_n", k=20,
+                        flops_per_worker=2e5, comm_units=1.0)
+        clock.charge(0.613)
+        return clock
+
+    rec = TraceRecorder()
+    fleet = FleetConfig(failure_rate=0.2, cold_start_prob=0.3)
+    recorded = drive(SimClock(StragglerModel(), fleet=fleet, recorder=rec))
+    path = tmp_path / "trace.jsonl"
+    rec.dump(path)
+    replayed = drive(SimClock(StragglerModel(), replay=load_trace(path)))
+    assert replayed.time == recorded.time
+    assert replayed.dollars == recorded.dollars
+
+
+def test_replay_rejects_drifted_schedule(tmp_path):
+    rec = TraceRecorder()
+    clock = SimClock(StragglerModel(), recorder=rec)
+    clock.phase(jax.random.PRNGKey(0), 16, policy="wait_all")
+    path = tmp_path / "drift.jsonl"
+    rec.dump(path)
+    replay = SimClock(StragglerModel(), replay=load_trace(path))
+    with pytest.raises(ValueError, match="not the same schedule"):
+        replay.phase(jax.random.PRNGKey(0), 32, policy="wait_all")
+
+
+def test_newton_trace_replay_end_to_end(tmp_path):
+    """Same seed + recorded trace -> identical (time, cost) trajectories."""
+    data = _logistic(jax.random.PRNGKey(13), n=600, d=12)
+    obj = LogisticRegression(lam=1e-4)
+    cfg = NewtonConfig(iters=4, sketch=OverSketchConfig(256, 64, 0.25),
+                       coded_block_rows=64)
+    rec = TraceRecorder()
+    r1 = oversketched_newton(obj, data, jnp.zeros(12), cfg,
+                             model=SimClock(StragglerModel(), recorder=rec))
+    path = tmp_path / "newton.jsonl"
+    rec.dump(path)
+    r2 = oversketched_newton(
+        obj, data, jnp.zeros(12), cfg,
+        model=SimClock(StragglerModel(), replay=load_trace(path)))
+    assert r1.history["time"] == r2.history["time"]
+    assert r1.history["cost"] == r2.history["cost"]
+
+
+# -------------------------------------------------------------- calibration
+def test_calibration_recovers_fig1_shape():
+    model = StragglerModel(base_time=135.0, invoke_overhead=0.0)
+    times = np.asarray(model.sample_times(jax.random.PRNGKey(0), 3600))
+    fit = calibrate_from_times(times)
+    assert abs(fit.base_time - 135.0) / 135.0 < 0.05
+    assert 0.005 < fit.p_tail < 0.05
+    refit = np.asarray(fit.sample_times(jax.random.PRNGKey(1), 3600))
+    assert abs(float(np.median(refit)) - float(np.median(times))) \
+        / float(np.median(times)) < 0.1
+
+
+def test_calibration_rejects_garbage():
+    with pytest.raises(ValueError, match="positive"):
+        calibrate_from_times([1.0, -2.0, 3.0])
+
+
+# --------------------------------------------------------------------- cost
+def test_cost_model_meters_add_up():
+    cm = CostModel()
+    assert cm.dollars(1.0, 0, 0, 0) == pytest.approx(cm.usd_per_gb_second)
+    assert cm.dollars(0, 1e6, 0, 0) == pytest.approx(0.2, rel=1e-3)
+    ec2 = CostModel(usd_per_invocation=0.0, usd_per_s3_put=0.0,
+                    usd_per_s3_get=0.0)
+    assert ec2.dollars(0, 1e6, 1e3, 1e3) == 0.0
+
+
+def test_reserved_billing_charges_wall_clock_for_the_whole_fleet():
+    """A fixed cluster bills n x elapsed (idle-behind-the-straggler time
+    included), not the sum of per-worker durations."""
+    n = 32
+    key = jax.random.PRNGKey(17)
+    lam = SimClock(StragglerModel(p_tail=0.2, tail_hi=3.0))
+    e_lam, _ = lam.phase(key, n, policy="wait_all")
+    ec2 = SimClock(StragglerModel(p_tail=0.2, tail_hi=3.0),
+                   cost=CostModel(billing="reserved"))
+    e_ec2, _ = ec2.phase(key, n, policy="wait_all")
+    assert float(e_lam) == float(e_ec2)          # same fleet, same clock
+    cm = CostModel(billing="reserved")
+    assert ec2.ledger.gb_seconds == pytest.approx(
+        cm.memory_gb * n * float(e_ec2))
+    # wall-clock x fleet >= sum of per-worker durations, strictly so
+    # whenever any worker idles behind the straggler
+    assert ec2.ledger.gb_seconds > lam.ledger.gb_seconds

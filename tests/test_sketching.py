@@ -13,7 +13,7 @@ from repro.core import (Dataset, LogisticRegression, NewtonConfig,
 from repro.core.sketch import sketched_gram
 from repro.kernels import ops, ref
 
-FAMILIES = ("oversketch", "srht", "sjlt", "gaussian", "nystrom")
+FAMILIES = ("oversketch", "srht", "sjlt", "gaussian", "nystrom", "leverage")
 
 
 def _cfg(m=256, b=64, zeta=0.25):
@@ -122,6 +122,30 @@ def test_fwht_rejects_non_pow2():
         ref.fwht(jnp.zeros((1, 100, 4)))
 
 
+# ----------------------------------------------------------------- leverage
+def test_leverage_beats_uniform_sampling_on_spiky_rows():
+    """On a matrix whose mass sits in a few high-leverage rows, uniform
+    Nystrom sampling mostly misses them; leverage-score sampling keeps
+    them (Drineas-Mahoney-Muthukrishnan) at the same per-worker cost."""
+    key = jax.random.PRNGKey(11)
+    a = jax.random.normal(key, (400, 10)) * 0.05
+    a = a.at[:8].mul(40.0)                  # 8 dominant rows
+    cfg = _cfg(256, 64, 0.25)
+    true = a.T @ a
+
+    def mean_err(name):
+        fam = sketching.get(name, cfg)
+        errs = []
+        for r in range(20):
+            state = fam.sample(jax.random.fold_in(key, r), 400)
+            g = fam.gram(state, a)
+            errs.append(float(jnp.linalg.norm(g - true)
+                              / jnp.linalg.norm(true)))
+        return np.mean(errs)
+
+    assert mean_err("leverage") < 0.5 * mean_err("nystrom")
+
+
 # ------------------------------------------------------------------- debias
 def test_mp_factor_values():
     assert float(sketching.mp_factor(20, 80)) == pytest.approx(0.75)
@@ -193,6 +217,32 @@ def test_distributed_avg_mode_converges():
     res = oversketched_newton(obj, data, jnp.zeros(data.x.shape[1]), cfg)
     assert res.history["gnorm"][-1] < 1e-3
     assert res.history["time"] == sorted(res.history["time"])
+
+
+def test_distavg_cg_agrees_with_dense_solve():
+    """distavg_solver='cg' (matvec-only per-block solves, for d beyond
+    master-factorization scale) must track the dense Cholesky path."""
+    data = _logistic(jax.random.PRNGKey(12))
+    obj = LogisticRegression(lam=1e-4)
+    base = dict(iters=6, sketch=OverSketchConfig(512, 128, 0.25),
+                coded_block_rows=128, sketch_family="gaussian",
+                sketch_mode="distributed-avg", debias=True)
+    r_chol = oversketched_newton(obj, data, jnp.zeros(data.x.shape[1]),
+                                 NewtonConfig(distavg_solver="chol", **base))
+    r_cg = oversketched_newton(obj, data, jnp.zeros(data.x.shape[1]),
+                               NewtonConfig(distavg_solver="cg", **base))
+    np.testing.assert_allclose(np.asarray(r_chol.w), np.asarray(r_cg.w),
+                               rtol=1e-3, atol=1e-4)
+    assert r_cg.history["gnorm"][-1] < 1e-3
+
+
+def test_unknown_distavg_solver_raises():
+    data = _logistic(jax.random.PRNGKey(14), n=200, d=8)
+    with pytest.raises(ValueError, match="distavg_solver"):
+        oversketched_newton(LogisticRegression(), data, jnp.zeros(8),
+                            NewtonConfig(iters=1,
+                                         sketch=_cfg(128, 64, 0.25),
+                                         distavg_solver="qr"))
 
 
 def test_distavg_requires_block_size_above_dim():

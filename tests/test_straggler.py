@@ -53,6 +53,40 @@ def test_speculative_beats_wait_all_with_heavy_tail():
     assert wins >= 15
 
 
+def test_speculative_relaunch_does_the_phase_work():
+    """Regression: relaunched stragglers must redo the phase's ACTUAL work.
+    The old default re-sampled with work_per_worker=1.0, so heavy phases
+    got unrealistically fast relaunches and speculative baselines looked
+    optimistic (fig10)."""
+    work = 50.0
+    m = sg.StragglerModel(p_tail=0.2, tail_lo=5.0, tail_hi=5.0,
+                          invoke_overhead=0.0)
+    key = jax.random.PRNGKey(21)
+    times = m.sample_times(key, 100, work_per_worker=work)
+    deadline = float(jnp.sort(times)[89])   # watch_fraction=0.9 deadline
+    spec = float(sg.speculative_time(times, jax.random.PRNGKey(1021), m,
+                                     work_per_worker=work))
+    # A relaunch doing the real work needs ~`work` more seconds; the buggy
+    # unit-work relaunch finished ~1s after the deadline.
+    assert spec > deadline + 0.5 * work
+    # and relaunching never does worse than waiting (a relaunch can
+    # straggle too, in which case the original's finish is kept)
+    assert spec <= float(sg.wait_all_time(times)) + 1e-6
+
+
+def test_clock_phase_speculative_threads_work():
+    """The engine's speculative policy relaunches with the phase work too:
+    a heavy phase's elapsed must reflect work-scaled relaunches."""
+    m = sg.StragglerModel(p_tail=0.2, tail_lo=5.0, tail_hi=5.0,
+                          invoke_overhead=0.0)
+    work = 50.0
+    clock = sg.SimClock(m)
+    elapsed, _ = clock.phase(jax.random.PRNGKey(22), 100,
+                             work_per_worker=work, policy="speculative")
+    body_time = work * 1.3     # generous bound on a non-straggler's time
+    assert float(elapsed) > body_time + 0.5 * work
+
+
 def test_clock_accumulates():
     clock = sg.SimClock(sg.StragglerModel())
     e1, m1 = clock.phase(jax.random.PRNGKey(0), 16, policy="wait_all")
