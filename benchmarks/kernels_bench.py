@@ -49,6 +49,50 @@ def run(quick: bool = True):
     rows.append({"name": "kernel_oversketch_gram_pallas_check", "us": 0.0,
                  "derived": f"max_err={err2:.2e}"})
 
+    # fused sketch->gram streaming kernel vs unfused apply+gram (the
+    # two-HBM-round-trip baseline it replaces).  The 1/sqrt(n) row scale
+    # keeps Gram entries O(1) so max_err is an absolute float32 figure.
+    kg, ng, dg, bg = (6, 4096, 256, 256) if quick else (10, 20_000, 512, 512)
+    kh2, ks2, ka2, kr2 = jax.random.split(jax.random.fold_in(key, 2), 4)
+    h2 = jax.random.randint(kh2, (kg, ng), 0, bg, dtype=jnp.int32)
+    sg2 = jax.random.rademacher(ks2, (kg, ng), dtype=jnp.float32)
+    a2 = jax.random.normal(ka2, (ng, dg)) / math.sqrt(ng)
+    surv = jnp.ones((kg,), bool).at[0].set(False)
+    gram_fl = 2.0 * kg * bg * dg * dg
+    # Per-row flop counts match what each implementation actually executes:
+    # fused kernel = dense encode matmul + gram; scatter-style count ref =
+    # one signed add per element; FWHT ref = butterfly.
+    flops_fused = 2.0 * kg * ng * bg * dg + gram_fl
+    flops_count_ref = 2.0 * kg * ng * dg + gram_fl
+    n_pad_s = 1 << (ng - 1).bit_length()
+    flops_srht_ref = kg * n_pad_s * math.log2(n_pad_s) * dg + gram_fl
+    f_unf = jax.jit(lambda: ref.sketch_gram_count(h2, sg2, a2, bg, surv))
+    us_unf = time_fn(f_unf)
+    rows.append({"name": "kernel_sketch_gram_count_unfused_ref",
+                 "us": us_unf,
+                 "derived": (f"gflops={flops_count_ref/us_unf/1e3:.2f};"
+                             f"shape=({kg},{ng},{dg},{bg})")})
+    f_fus = lambda: ops.sketch_gram_count(h2, sg2, a2, bg, surv)
+    us_fus = time_fn(f_fus, iters=3, warmup=1)
+    err_f = float(jnp.abs(f_fus() - f_unf()).max())
+    rows.append({"name": "kernel_sketch_gram_count_fused", "us": us_fus,
+                 "derived": (f"gflops={flops_fused/us_fus/1e3:.2f};"
+                             f"max_err={err_f:.2e}")})
+
+    rws = jax.random.randint(kr2, (kg, bg), 0, n_pad_s, dtype=jnp.int32)
+    f_unf_s = jax.jit(lambda: ref.sketch_gram_srht(rws, sg2, a2, surv))
+    us_unf_s = time_fn(f_unf_s)
+    rows.append({"name": "kernel_sketch_gram_srht_unfused_ref",
+                 "us": us_unf_s,
+                 "derived": (f"gflops={flops_srht_ref/us_unf_s/1e3:.2f};"
+                             f"shape=({kg},{ng},{dg},{bg})")})
+    f_fus_s = lambda: ops.sketch_gram_srht(rws, sg2, a2, surv)
+    us_fus_s = time_fn(f_fus_s, iters=3, warmup=1)
+    err_s = float(jnp.abs(f_fus_s() - f_unf_s()).max())
+    rows.append({"name": "kernel_sketch_gram_srht_fused", "us": us_fus_s,
+                 "derived": (f"gflops={flops_fused/us_fus_s/1e3:.2f};"
+                             f"max_err={err_s:.2e}")})
+
     # srht fwht (blocked Kronecker-matmul kernel vs butterfly oracle)
     kf, nf, df = (4, 1024, 256) if quick else (8, 8192, 1000)
     xf = jax.random.normal(ks, (kf, nf, df))
@@ -60,6 +104,17 @@ def run(quick: bool = True):
     errf = float(jnp.abs(ops.fwht(xf) - f_ref_f()).max())
     rows.append({"name": "kernel_fwht_pallas_check", "us": 0.0,
                  "derived": f"max_err={errf:.2e}"})
+
+    # two-pass tiled fwht (streams O(sqrt(n)) VMEM panels; the compile
+    # path for n beyond the monolithic kernel's panel budget)
+    k2p, n2p, d2p = (2, 4096, 256) if quick else (4, 16384, 256)
+    x2p = jax.random.normal(jax.random.fold_in(ks, 3), (k2p, n2p, d2p))
+    f_2p = lambda: ops.fwht_two_pass(x2p)
+    us2p = time_fn(f_2p, iters=3, warmup=1)
+    err2p = float(jnp.abs(f_2p() - ref.fwht(x2p)).max())
+    rows.append({"name": "kernel_fwht_two_pass", "us": us2p,
+                 "derived": (f"max_err={err2p:.2e};"
+                             f"shape=({k2p},{n2p},{d2p})")})
 
     # coded matvec
     w, bb, s = (25, 128, 2048) if quick else (64, 256, 8192)

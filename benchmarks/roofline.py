@@ -2,7 +2,13 @@
 (per-arch smoke at 8 placeholder devices in a subprocess keeps this fast and
 keeps the main process single-device) + the analytic full-mesh terms for
 every (arch x shape) cell — the full table lives in EXPERIMENTS.md and the
-sweep JSON produced by `python -m repro.launch.dryrun --all`."""
+sweep JSON produced by `python -m repro.launch.dryrun --all`.
+
+Also reports the sketch->Gram hot path's arithmetic intensity, fused
+(``kernels/sketch_gram.py``, A streams once and A_tilde stays in VMEM)
+next to the unfused two-pass pipeline it replaces (apply writes A_tilde to
+HBM, Gram reads it back) — the HBM-traffic delta is the whole point of the
+fusion, so it belongs on the roofline."""
 from __future__ import annotations
 
 from repro.launch import analytic
@@ -10,8 +16,42 @@ from repro.launch.dryrun import PEAK_FLOPS, HBM_BW, ICI_BW
 from repro.models.registry import SHAPES, get_bundle, get_config
 
 
+def sketch_gram_intensity(k: int, n: int, d: int, b: int):
+    """Analytic (flops, hbm_bytes, ai) for fused vs unfused sketch->Gram.
+
+    Both execute the same MXU work: the encode matmul 2*K*n*b*d (one-hot /
+    Hadamard mix columns are materialized in VMEM, not read from HBM) plus
+    the Gram 2*K*b*d^2.  Traffic differs: both read A once per sketch
+    block (K*n*d floats); the unfused pipeline additionally writes the
+    (K, b, d) A_tilde and reads it back for the Gram pass.
+    """
+    flops = 2.0 * k * n * b * d + 2.0 * k * b * d * d
+    a_read = 4.0 * k * n * d
+    gram_out = 4.0 * d * d
+    unfused = a_read + 2.0 * 4.0 * k * b * d + gram_out
+    fused = a_read + gram_out
+    return flops, fused, unfused
+
+
 def run(quick: bool = True):
     rows = []
+    # sketch->gram hot path (paper Alg. 2): fused vs unfused AI at the
+    # kernels_bench full shape.  Analytic, so quick == full.
+    kk, nn, dd, bb = 10, 20_000, 512, 512
+    flops, bytes_f, bytes_u = sketch_gram_intensity(kk, nn, dd, bb)
+    ridge = PEAK_FLOPS / HBM_BW
+    for tag, byts in (("fused", bytes_f), ("unfused", bytes_u)):
+        ai = flops / byts
+        bound = "compute" if ai >= ridge else "memory"
+        t_hbm = byts / HBM_BW
+        t_mxu = flops / PEAK_FLOPS
+        rows.append({
+            "name": f"roofline_sketch_gram_{tag}",
+            "us": max(t_hbm, t_mxu) * 1e6,
+            "derived": (f"bound={bound};ai={ai:.1f};ridge={ridge:.1f};"
+                        f"hbm_mb={byts/1e6:.1f};gflop={flops/1e9:.1f};"
+                        f"shape=({kk},{nn},{dd},{bb})"),
+        })
     archs = ["qwen3-4b", "qwen3-moe-235b-a22b", "mamba2-780m"] if quick else \
         None
     if archs is None:

@@ -5,12 +5,26 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Default is the quick profile
 (CPU-scaled dataset sizes, same generative models and worker ratios as the
 paper's experiments; see repro/configs/paper.py).
+
+Modules listed in ``PERSIST_JSON`` additionally write their rows (plus
+backend / jax-version metadata) to a ``BENCH_*.json`` file at the repo
+root — the persistent perf trajectory CI archives per push, so kernel
+regressions have a baseline to diff against (see kernels/README.md).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# module -> repo-root JSON file persisting its rows as a perf baseline
+PERSIST_JSON = {
+    "kernels_bench": "BENCH_kernels.json",
+}
 
 MODULES = [
     "fig1_stragglers",
@@ -54,6 +68,22 @@ def main(argv=None) -> int:
             continue
         for r in rows:
             print(f"{r['name']},{r['us']:.1f},{r['derived']}")
+        if mod_name in PERSIST_JSON:
+            import jax
+            payload = {
+                "meta": {
+                    "module": mod_name,
+                    "profile": "full" if args.full else "quick",
+                    "backend": jax.default_backend(),
+                    "jax_version": jax.__version__,
+                    "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                         time.gmtime()),
+                },
+                "rows": rows,
+            }
+            path = REPO_ROOT / PERSIST_JSON[mod_name]
+            path.write_text(json.dumps(payload, indent=1) + "\n")
+            print(f"# wrote {path}", file=sys.stderr)
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
     return 1 if failures else 0
 

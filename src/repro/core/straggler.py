@@ -152,10 +152,16 @@ class SimClock:
               flops_per_worker: Optional[float] = None,
               policy: str = "wait_all", k: Optional[int] = None,
               comm_units: float = 0.0,
-              decodable=None) -> Tuple[float, jax.Array]:
-        """Simulate one phase; returns (elapsed, finished_mask)."""
+              decodable=None,
+              not_before: Optional[float] = None) -> Tuple[float, jax.Array]:
+        """Simulate one phase; returns (elapsed, finished_mask).
+
+        ``not_before`` (absolute simulated seconds) overlaps this phase
+        with whatever advanced the clock since that time — see
+        ``FleetEngine.run_phase``."""
         elapsed, mask = self.engine.run_phase(
             key, num_workers, work_per_worker=work_per_worker,
             flops_per_worker=flops_per_worker, policy=policy, k=k,
-            comm_units=comm_units, decodable=decodable)
+            comm_units=comm_units, decodable=decodable,
+            not_before=not_before)
         return elapsed, jnp.asarray(mask)

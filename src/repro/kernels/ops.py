@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import coded_matvec as _cmv
 from repro.kernels import count_sketch as _cs
 from repro.kernels import oversketch_matmul as _og
+from repro.kernels import sketch_gram as _sg
 from repro.kernels import srht as _srht
 
 
@@ -39,9 +40,34 @@ def oversketch_gram(a_tilde: jax.Array, survivors: jax.Array,
                                interpret=_interpret(interpret))
 
 
+def sketch_gram_count(h: jax.Array, sigma: jax.Array, a: jax.Array,
+                      block_size: int, survivors: jax.Array,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """Fused count-sketch Gram (K,n),(K,n),(n,d),(K,) -> (d,d); A_tilde
+    never hits HBM (streaming apply + in-register masked Gram)."""
+    return _sg.sketch_gram_count(h, sigma, a, block_size, survivors,
+                                 interpret=_interpret(interpret))
+
+
+def sketch_gram_srht(rows: jax.Array, sigma: jax.Array, a: jax.Array,
+                     survivors: jax.Array,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Fused SRHT Gram (K,b),(K,n),(n,d),(K,) -> (d,d); the Hadamard mix
+    rows are regenerated block-locally so the mixed panel never exists."""
+    return _sg.sketch_gram_srht(rows, sigma, a, survivors,
+                                interpret=_interpret(interpret))
+
+
 def fwht(x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
-    """Orthonormal Walsh-Hadamard transform along axis 1 of (K, n, d)."""
+    """Orthonormal Walsh-Hadamard transform along axis 1 of (K, n, d).
+    Dispatches monolithic-panel vs two-pass tiled on the VMEM budget."""
     return _srht.fwht(x, interpret=_interpret(interpret))
+
+
+def fwht_two_pass(x: jax.Array,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Force the two-pass tiled FWHT (local + across Kronecker passes)."""
+    return _srht.fwht_two_pass(x, interpret=_interpret(interpret))
 
 
 def coded_block_matvec(enc: jax.Array, x: jax.Array, erased: jax.Array,

@@ -52,6 +52,43 @@ def fwht(x: jax.Array) -> jax.Array:
     return jax.vmap(one)(x)
 
 
+def srht_apply(rows: jax.Array, sigma: jax.Array, a: jax.Array) -> jax.Array:
+    """Blocked SRHT apply, the unfused oracle: sign, zero-pad to n_pad =
+    next power of two, orthonormal FWHT, gather the b sampled rows, scale
+    by sqrt(n_pad/b).
+
+    rows: (K, b) int32 sampled Hadamard-row indices in [0, n_pad)
+    sigma: (K, n) Rademacher signs
+    a:    (n, d)
+    ->    (K, b, d)
+    """
+    n, d = a.shape
+    n_pad = 1 << max(0, (n - 1).bit_length())
+    b = rows.shape[1]
+    scale = jnp.sqrt(jnp.asarray(n_pad / b, jnp.float32))
+
+    def one(rk, sk):
+        x = sk[:, None] * a.astype(jnp.float32)
+        if n_pad != n:
+            x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+        return fwht(x[None])[0][rk] * scale
+
+    return jax.vmap(one)(rows, sigma)
+
+
+def sketch_gram_count(h: jax.Array, sigma: jax.Array, a: jax.Array,
+                      block_size: int, survivors: jax.Array) -> jax.Array:
+    """Unfused apply+gram composition: the fused count-sketch oracle."""
+    return oversketch_gram(count_sketch_apply(h, sigma, a, block_size),
+                           survivors)
+
+
+def sketch_gram_srht(rows: jax.Array, sigma: jax.Array, a: jax.Array,
+                     survivors: jax.Array) -> jax.Array:
+    """Unfused apply+gram composition: the fused SRHT oracle."""
+    return oversketch_gram(srht_apply(rows, sigma, a), survivors)
+
+
 def coded_block_matvec(enc: jax.Array, x: jax.Array,
                        erased: jax.Array) -> jax.Array:
     """Per-worker block products with straggler masking.

@@ -1,0 +1,188 @@
+"""Pallas TPU kernel: fused sketch->Gram streaming pipeline.
+
+The paper's per-iteration hot path (Alg. 2 steps 3-5) is "sketch then
+multiply": form ``A_tilde_k = S_k^T A`` for every sketch block, then
+accumulate the survivor-masked Gram ``G = (1/N_avail) sum_k m_k
+A_tilde_k^T A_tilde_k``.  The unfused pipeline costs two HBM round-trips —
+``A_tilde`` (K, b, d) is written by the apply kernel and re-read by the
+Gram kernel.  This kernel fuses the two: it streams row-panels of A once,
+applies the sketch block-locally, keeps the running ``A_tilde_k`` panel in
+a VMEM accumulator, and folds the masked Gram contribution into the
+resident (d, d) output tile when a block's reduction completes.
+``A_tilde`` never touches HBM.
+
+Both supported families reduce to the same structure — a per-(block,
+row-tile) *encode matrix* ``E in R^{tn x b}`` materialized in VMEM from
+``broadcasted_iota`` (no host constants), followed by an MXU matmul:
+
+  count-sketch:  E[r, c] = sigma_r * 1{h_r == c}
+                 (the signed one-hot bucket matrix of ``count_sketch.py``)
+  SRHT:          E[r, c] = sigma_r * (-1)^popcount((o + r) & rows_c) / sqrt(b)
+                 (the sampled-row slice of the Hadamard mix: H is symmetric,
+                 so gathering b rows of H D A is a matmul with b *columns*
+                 of H, each regenerated from the global row index o + r.
+                 The SRHT scale sqrt(n_pad/b) * 1/sqrt(n_pad) collapses to
+                 1/sqrt(b), so n_pad appears only through the bit pattern,
+                 and zero rows past n never need to be streamed.)
+
+Grid: (K, n_tiles) with the row-panel reduction innermost.  VMEM holds one
+(tn, d_pad) panel of A, the (tn, b) encode matrix, the (b, d_pad)
+``A_tilde_k`` accumulator, and the resident (d_pad, d_pad) output — see
+kernels/README.md for the budget formula.  The caller divides by the
+survivor count (same convention as ``oversketch_matmul``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_TILE_N = 256
+# Budget for the kernel's resident VMEM working set (headroom under the
+# ~16 MB/core ceiling).  The resident (d_pad, d_pad) output is the binding
+# term: past it, callers must use the unfused apply+gram pair, which tiles
+# d — SketchFamily.gram_fused returns None on fits_fused_vmem() == False
+# so the registry fallback engages automatically.
+MAX_FUSED_VMEM_BYTES = 12 * 1024 * 1024
+
+
+def fused_vmem_bytes(block_size: int, d: int,
+                     tile_n: int = DEFAULT_TILE_N) -> int:
+    """Working-set bytes: double-buffered A panel, encode matrix, A_tilde
+    scratch, resident output (see kernels/README.md)."""
+    d_pad = d + ((-d) % 128)
+    return 4 * (2 * tile_n * d_pad + tile_n * block_size
+                + block_size * d_pad + d_pad * d_pad)
+
+
+def fits_fused_vmem(block_size: int, d: int,
+                    tile_n: int = DEFAULT_TILE_N) -> bool:
+    return fused_vmem_bytes(block_size, d, tile_n) <= MAX_FUSED_VMEM_BYTES
+
+
+def _encode_count(meta, sigma, offset, block_size):
+    """Signed one-hot bucket matrix (tn, b): meta is the (tn,) h slice."""
+    tn = sigma.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tn, block_size), 1)
+    return jnp.where(meta[:, None] == iota, sigma[:, None], 0.0)
+
+
+def _encode_srht(meta, sigma, offset, block_size):
+    """Sampled Hadamard mix (tn, b): meta is the (b,) sampled-row vector."""
+    tn = sigma.shape[0]
+    g = jax.lax.broadcasted_iota(jnp.int32, (tn, block_size), 0) + offset
+    bits = jax.lax.population_count(jnp.bitwise_and(g, meta[None, :]))
+    had = jnp.where(bits % 2 == 0, 1.0, -1.0)
+    return sigma[:, None] * had * (1.0 / math.sqrt(float(block_size)))
+
+
+_ENCODERS = {"count": _encode_count, "srht": _encode_srht}
+
+
+def _kernel(mask_ref, meta_ref, sigma_ref, a_ref, out_ref, acc_ref, *,
+            mode: str, block_size: int, tile_n: int):
+    kk = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when((kk == 0) & (i == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(i == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    sigma = sigma_ref[0]                      # (tn,) signs; 0 on padded rows
+    a = a_ref[...]                            # (tn, d_pad)
+    enc = _ENCODERS[mode](meta_ref[0], sigma, i * tile_n, block_size)
+    # MXU: (b, tn) @ (tn, d_pad) accumulated into the resident A_tilde panel.
+    acc_ref[...] += jax.lax.dot_general(
+        enc.astype(a.dtype), a, (((0,), (0,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _fold_gram():
+        at = acc_ref[...]                     # (b, d_pad) complete A_tilde_k
+        m = mask_ref[0]
+        out_ref[...] += m * jax.lax.dot_general(
+            at, at, (((0,), (0,)), ((), ())),
+            preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "block_size", "tile_n",
+                                    "interpret"))
+def _sketch_gram(mask: jax.Array, meta: jax.Array, sigma: jax.Array,
+                 a: jax.Array, *, mode: str, block_size: int, tile_n: int,
+                 interpret: bool) -> jax.Array:
+    k, n = sigma.shape
+    d = a.shape[1]
+    tn = min(tile_n, max(8, n))
+    n_pad, d_pad = (-n) % tn, (-d) % 128
+    if n_pad or d_pad:
+        a = jnp.pad(a, ((0, n_pad), (0, d_pad)))
+        # Padded rows get sigma 0 so they contribute nothing.
+        sigma = jnp.pad(sigma, ((0, 0), (0, n_pad)))
+        if mode == "count":
+            meta = jnp.pad(meta, ((0, 0), (0, n_pad)))
+    n_t, d_tot = (n + n_pad) // tn, d + d_pad
+    meta_spec = (pl.BlockSpec((1, tn), lambda kk, i: (kk, i))
+                 if mode == "count"
+                 else pl.BlockSpec((1, block_size), lambda kk, i: (kk, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, mode=mode, block_size=block_size,
+                          tile_n=tn),
+        grid=(k, n_t),
+        in_specs=[
+            pl.BlockSpec((1,), lambda kk, i: (kk,)),
+            meta_spec,
+            pl.BlockSpec((1, tn), lambda kk, i: (kk, i)),
+            pl.BlockSpec((tn, d_tot), lambda kk, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((d_tot, d_tot), lambda kk, i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_tot, d_tot), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_size, d_tot), jnp.float32)],
+        interpret=interpret,
+    )(mask, meta, sigma.astype(jnp.float32), a.astype(jnp.float32))
+    n_avail = jnp.maximum(mask.sum(), 1.0)
+    return out[:d, :d] / n_avail
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "tile_n",
+                                             "interpret"))
+def sketch_gram_count(h: jax.Array, sigma: jax.Array, a: jax.Array,
+                      block_size: int, survivors: jax.Array, *,
+                      tile_n: int = DEFAULT_TILE_N,
+                      interpret: bool = False) -> jax.Array:
+    """Fused count-sketch Gram: (K,n),(K,n),(n,d),(K,) -> (d,d).
+
+    Equivalent to ``oversketch_gram(count_sketch_apply(h, sigma, a, b),
+    survivors)`` with ``A_tilde`` kept in VMEM.
+    """
+    return _sketch_gram(survivors.astype(jnp.float32), h, sigma, a,
+                        mode="count", block_size=block_size, tile_n=tile_n,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def sketch_gram_srht(rows: jax.Array, sigma: jax.Array, a: jax.Array,
+                     survivors: jax.Array, *,
+                     tile_n: int = DEFAULT_TILE_N,
+                     interpret: bool = False) -> jax.Array:
+    """Fused SRHT Gram: (K,b),(K,n),(n,d),(K,) -> (d,d).
+
+    rows are the b sampled Hadamard-row indices per block (in [0, n_pad));
+    equivalent to the SRHT family's sign -> pad -> FWHT -> gather -> Gram
+    chain, but block-local: the b needed mix rows are regenerated per
+    row-panel so the (n_pad, d) mixed panel never exists.
+    """
+    b = rows.shape[1]
+    return _sketch_gram(survivors.astype(jnp.float32), rows, sigma, a,
+                        mode="srht", block_size=b, tile_n=tile_n,
+                        interpret=interpret)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: batched blocked fast Walsh-Hadamard transform (FWHT).
+"""Pallas TPU kernels: batched blocked fast Walsh-Hadamard transform (FWHT).
 
 The SRHT sketch block is ``S_i^T A = sqrt(n_pad/b) * P_i H_norm (D_i A)``:
 random signs, an orthonormal Hadamard mix, then b sampled rows.  The mix is
@@ -14,9 +14,26 @@ The Hadamard factors are materialized in VMEM from ``broadcasted_iota`` via
 count-sketch one-hot kernel.  Arithmetic intensity rises from O(1) to
 O(sqrt(n)) and the op becomes MXU-bound.
 
-Grid: (K, d_tiles); each kernel invocation transforms one (n_pad, td) panel
-of one sketch block, so VMEM holds ~ n_pad * td * 4 bytes + the two factor
-matrices (n1^2 + n2^2 <= 2 * n_pad).
+Two kernels share that identity:
+
+* ``_fwht_panel`` (monolithic): grid (K, d_tiles), each invocation holds one
+  full (n, td) panel in VMEM and does both contractions.  VMEM ~
+  2 * n * td * 4 bytes (in + out blocks) + (n1^2 + n2^2) * 4 for the
+  factors — fine up to n ~ 4096 at td = 256, but n >> VMEM cannot compile.
+
+* ``fwht_two_pass`` (tiled): the same Kronecker split executed as two
+  pallas_calls that never hold a full panel.  Split the row index
+  g = q * n2 + r (q = high bits, r = low bits); then
+  ``H_n[g, g'] = H_{n1}[q, q'] * H_{n2}[r, r']`` and the transform
+  factorizes into a LOCAL pass (contract r' with H_{n2} inside each
+  contiguous n2-row chunk; grid (K, n1, d_tiles), VMEM ~ 2 * n2 * td * 4)
+  and an ACROSS pass (contract q' with H_{n1}, a strided matmul over the
+  chunk axis; grid (K, n2/tr, d_tiles), VMEM ~ 2 * n1 * tr * td * 4).
+  Peak VMEM drops from O(n * td) to O(sqrt(n) * td) and any power-of-two n
+  compiles.  The intermediate makes one HBM round-trip — the price of
+  streaming; the factor matrices stay O(n1^2 + n2^2) = O(n).
+
+``fwht`` dispatches between them on the documented VMEM panel budget.
 """
 from __future__ import annotations
 
@@ -29,6 +46,17 @@ from jax.experimental import pallas as pl
 
 
 DEFAULT_TILE_D = 256
+DEFAULT_TILE_R = 8
+# Monolithic-panel budget: double-buffered in+out (n, td) blocks must fit
+# comfortably under the ~16 MB/core VMEM ceiling next to the factor
+# matrices; beyond this the dispatcher switches to the two-pass kernel.
+MAX_PANEL_BYTES = 4 * 1024 * 1024
+
+
+def _split_pow2(n: int):
+    log = int(math.log2(n)) if n > 1 else 0
+    n1 = 1 << (log // 2)
+    return n1, n // n1
 
 
 def _hadamard(n: int, dtype) -> jax.Array:
@@ -39,7 +67,7 @@ def _hadamard(n: int, dtype) -> jax.Array:
     return jnp.where(bits % 2 == 0, 1.0, -1.0).astype(dtype)
 
 
-def _kernel(x_ref, out_ref, *, n1: int, n2: int):
+def _panel_kernel(x_ref, out_ref, *, n1: int, n2: int):
     x = x_ref[0]                                    # (n1*n2, td)
     td = x.shape[1]
     h1 = _hadamard(n1, x.dtype)
@@ -56,32 +84,115 @@ def _kernel(x_ref, out_ref, *, n1: int, n2: int):
     out_ref[0] = y * (1.0 / math.sqrt(float(n1 * n2)))
 
 
-@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
-def fwht(x: jax.Array, *, tile_d: int = DEFAULT_TILE_D,
-         interpret: bool = False) -> jax.Array:
-    """Orthonormal Walsh-Hadamard transform along axis 1 of (K, n, d).
+def _local_kernel(x_ref, out_ref, *, n2: int):
+    """Pass A: one contiguous (n2, td) chunk, contract r' with H_{n2}."""
+    x = x_ref[0, 0]                                 # (n2, td)
+    h2 = _hadamard(n2, x.dtype)
+    out_ref[0, 0] = jax.lax.dot_general(
+        h2, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
-    n must be a power of two (callers zero-pad; padded rows mix harmlessly
-    since the transform is linear).  Satisfies fwht(fwht(x)) == x.
-    """
-    k, n, d = x.shape
+
+def _across_kernel(x_ref, out_ref, *, n1: int, scale: float):
+    """Pass B: a strided (n1, tr, td) slab, contract q' with H_{n1}."""
+    x = x_ref[0]                                    # (n1, tr, td)
+    tr, td = x.shape[1], x.shape[2]
+    h1 = _hadamard(n1, x.dtype)
+    y = jax.lax.dot_general(h1, x.reshape(n1, tr * td),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    out_ref[0] = y.reshape(n1, tr, td) * scale
+
+
+def _check_pow2(n: int) -> None:
     if n & (n - 1):
         raise ValueError(f"fwht length {n} must be a power of two")
-    log = int(math.log2(n)) if n > 1 else 0
-    n1 = 1 << (log // 2)
-    n2 = n // n1
+
+
+def _pad_d(x: jax.Array, tile_d: int):
+    d = x.shape[-1]
     td = min(tile_d, max(128, d))
     d_pad = (-d) % td
     if d_pad:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, d_pad)))
-    d_t = (d + d_pad) // td
+    return x, td, (d + d_pad) // td
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "tile_r", "interpret"))
+def fwht_two_pass(x: jax.Array, *, tile_d: int = DEFAULT_TILE_D,
+                  tile_r: int = DEFAULT_TILE_R,
+                  interpret: bool = False) -> jax.Array:
+    """Two-pass tiled orthonormal FWHT along axis 1 of (K, n, d).
+
+    Kronecker decomposition streamed as local + across passes so VMEM
+    holds O(sqrt(n) * tile) instead of a full (n, tile_d) panel; any
+    power-of-two n compiles.  Matches ``fwht`` / the butterfly oracle.
+    """
+    k, n, d = x.shape
+    _check_pow2(n)
+    n1, n2 = _split_pow2(n)
+    x, td, d_t = _pad_d(x, tile_d)
+    d_tot = td * d_t
+    x4 = x.astype(jnp.float32).reshape(k, n1, n2, d_tot)
+
+    mid = pl.pallas_call(
+        functools.partial(_local_kernel, n2=n2),
+        grid=(k, n1, d_t),
+        in_specs=[pl.BlockSpec((1, 1, n2, td), lambda kk, q, j: (kk, q, 0, j))],
+        out_specs=pl.BlockSpec((1, 1, n2, td), lambda kk, q, j: (kk, q, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n1, n2, d_tot), jnp.float32),
+        interpret=interpret,
+    )(x4)
+
+    tr = min(tile_r, n2)                 # both powers of two => tr | n2
+    out = pl.pallas_call(
+        functools.partial(_across_kernel, n1=n1,
+                          scale=1.0 / math.sqrt(float(n))),
+        grid=(k, n2 // tr, d_t),
+        in_specs=[pl.BlockSpec((1, n1, tr, td),
+                               lambda kk, m, j: (kk, 0, m, j))],
+        out_specs=pl.BlockSpec((1, n1, tr, td),
+                               lambda kk, m, j: (kk, 0, m, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n1, n2, d_tot), jnp.float32),
+        interpret=interpret,
+    )(mid)
+    return out.reshape(k, n, d_tot)[:, :, :d]
+
+
+def panel_vmem_bytes(n: int, tile_d: int = DEFAULT_TILE_D,
+                     d: int = DEFAULT_TILE_D) -> int:
+    """VMEM footprint of the monolithic kernel's resident panel (the
+    dispatch quantity; see kernels/README.md for the full budget)."""
+    td = min(tile_d, max(128, d))
+    n1, n2 = _split_pow2(max(n, 1))
+    return 2 * n * td * 4 + (n1 * n1 + n2 * n2) * 4
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret",
+                                             "max_panel_bytes"))
+def fwht(x: jax.Array, *, tile_d: int = DEFAULT_TILE_D,
+         interpret: bool = False,
+         max_panel_bytes: int = MAX_PANEL_BYTES) -> jax.Array:
+    """Orthonormal Walsh-Hadamard transform along axis 1 of (K, n, d).
+
+    n must be a power of two (callers zero-pad; padded rows mix harmlessly
+    since the transform is linear).  Satisfies fwht(fwht(x)) == x.
+    Dispatches to the monolithic panel kernel while the panel fits
+    ``max_panel_bytes`` of VMEM, else to the two-pass tiled kernel.
+    """
+    k, n, d = x.shape
+    _check_pow2(n)
+    if panel_vmem_bytes(n, tile_d, d) > max_panel_bytes:
+        return fwht_two_pass(x, tile_d=tile_d, interpret=interpret)
+    n1, n2 = _split_pow2(n)
+    x, td, d_t = _pad_d(x, tile_d)
+    d_tot = td * d_t
 
     out = pl.pallas_call(
-        functools.partial(_kernel, n1=n1, n2=n2),
+        functools.partial(_panel_kernel, n1=n1, n2=n2),
         grid=(k, d_t),
         in_specs=[pl.BlockSpec((1, n, td), lambda kk, j: (kk, 0, j))],
         out_specs=pl.BlockSpec((1, n, td), lambda kk, j: (kk, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((k, n, d + d_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((k, n, d_tot), jnp.float32),
         interpret=interpret,
     )(x.astype(jnp.float32))
     return out[:, :, :d]

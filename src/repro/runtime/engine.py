@@ -154,18 +154,29 @@ class FleetEngine:
                   flops_per_worker: Optional[float] = None,
                   policy: str = "wait_all", k: Optional[int] = None,
                   comm_units: float = 0.0,
-                  decodable: Optional[Callable[[np.ndarray], bool]] = None
+                  decodable: Optional[Callable[[np.ndarray], bool]] = None,
+                  not_before: Optional[float] = None
                   ) -> Tuple[float, np.ndarray]:
         """Simulate one distributed phase; returns (elapsed, finished_mask).
 
         ``elapsed`` includes the master-side communication charge
         (``comm_per_unit * comm_units``), matching the historical SimClock
         accounting; the cost ledger bills workers and comm separately.
+
+        ``not_before`` is the phase's absolute launch time (simulated
+        seconds).  Default None launches at the current clock — strictly
+        sequential phases.  An earlier launch time models master-side
+        pipeline overlap (paper Sec. 4.1: encode overlaps compute): the
+        phase ran concurrently with whatever advanced the clock since,
+        so the clock only moves to ``max(now, not_before + elapsed)`` and
+        the overlapped makespan is never longer than the sequential one.
+        Billing is unaffected — every attempt costs the same GB-seconds
+        wherever it sits on the timeline.
         """
         if self.replay is not None:
-            elapsed, mask, entry = self.replay.next_phase(
+            elapsed, mask, entry, advance = self.replay.next_phase(
                 policy=policy, num_workers=num_workers)
-            self.seconds += elapsed
+            self.seconds += advance
             self.ledger.add(entry)
             self._phase_idx += 1
             return elapsed, mask
@@ -214,12 +225,16 @@ class FleetEngine:
             # (idle-behind-the-straggler time included), not its own work.
             entry.gb_seconds = (self.cost_model.memory_gb * num_workers
                                 * elapsed)
-        self.seconds += elapsed
+        if not_before is None:
+            advance = elapsed   # not (now + e) - now: that rounds off a ULP
+        else:
+            advance = max(0.0, float(not_before) + elapsed - self.seconds)
+        self.seconds += advance
         self.ledger.add(entry)
         if self.recorder is not None:
             self.recorder.record_phase(
                 self._phase_idx, policy=policy, num_workers=num_workers,
                 k=k, elapsed=elapsed, mask=np.asarray(outcome.mask, bool),
-                entry=entry, worker_times=done)
+                entry=entry, worker_times=done, advance=advance)
         self._phase_idx += 1
         return elapsed, np.asarray(outcome.mask, dtype=bool)

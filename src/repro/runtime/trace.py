@@ -49,10 +49,16 @@ class TraceRecorder:
     def record_phase(self, phase: int, *, policy: str, num_workers: int,
                      k: Optional[int], elapsed: float, mask: np.ndarray,
                      entry: CostLedger,
-                     worker_times: Optional[np.ndarray] = None) -> None:
+                     worker_times: Optional[np.ndarray] = None,
+                     advance: Optional[float] = None) -> None:
         row = {"kind": "phase", "phase": phase, "policy": policy,
                "workers": int(num_workers), "k": k,
                "elapsed": float(elapsed), "mask": _mask_to_hex(mask)}
+        if advance is not None and advance != elapsed:
+            # Overlapped phase (run_phase not_before=...): the clock moved
+            # by less than the phase duration.  Absent for sequential
+            # phases so pre-overlap traces replay unchanged.
+            row["advance"] = float(advance)
         row.update(entry.as_dict())
         if self.worker_times and worker_times is not None:
             row["worker_times"] = [float(t) for t in worker_times]
@@ -89,7 +95,7 @@ class TraceReplayer:
         return row
 
     def next_phase(self, *, policy: str, num_workers: int
-                   ) -> Tuple[float, np.ndarray, CostLedger]:
+                   ) -> Tuple[float, np.ndarray, CostLedger, float]:
         row = self._next("phase")
         if row["policy"] != policy or row["workers"] != num_workers:
             raise ValueError(
@@ -99,7 +105,8 @@ class TraceReplayer:
         entry = CostLedger(gb_seconds=row["gb_seconds"],
                            invocations=row["invocations"],
                            s3_puts=row["s3_puts"], s3_gets=row["s3_gets"])
-        return row["elapsed"], _mask_from_hex(row["mask"], num_workers), entry
+        return (row["elapsed"], _mask_from_hex(row["mask"], num_workers),
+                entry, row.get("advance", row["elapsed"]))
 
     def next_charge(self) -> float:
         return self._next("charge")["elapsed"]

@@ -13,6 +13,9 @@ This module defines the protocol every family implements:
   sample(key, num_rows) -> state     pytree of arrays (jit-transparent)
   apply(state, a)       -> (total_blocks, b, d) per-block  S_i^T A
   gram(state, a, survivors) -> (d, d) masked, rescaled Gram estimate
+  gram_fused(state, a, survivors) -> (d, d) or None — optional fused
+      sketch->Gram Pallas path (A_tilde never materialized); families
+      without one return None and ``gram`` falls back to apply+gram
   block_flops(num_rows, d) -> float  per-worker cost for the straggler clock
   comm_units(d)         -> float     per-worker master-I/O units
 
@@ -65,20 +68,35 @@ class SketchFamily(abc.ABC):
         """Per-block application A (n, d) -> (total_blocks, b, d), unscaled
         by 1/sqrt(N) (the survivor rescale in ``gram`` absorbs it)."""
 
+    def gram_fused(self, state: SketchState, a: jax.Array,
+                   survivors: jax.Array) -> Optional[jax.Array]:
+        """Fused streaming sketch->Gram (``kernels/sketch_gram.py``): the
+        per-block panels ``A_tilde_i`` stay in VMEM and never round-trip
+        through HBM.  Families with a block-local encode-matrix form
+        (count-sketch scatter, SRHT mix) override this; the default None
+        routes ``gram`` through the two-kernel apply+gram fallback."""
+        return None
+
     def gram(self, state: SketchState, a: jax.Array,
              survivors: Optional[jax.Array] = None,
              use_kernels: bool = False) -> jax.Array:
         """Masked H_hat = (1/N_avail) sum_i A_tilde_i^T A_tilde_i.
 
         Shared across families: per-block unbiasedness (E[S_i S_i^T] = I)
-        makes dropping blocks + rescaling exact for every family.
+        makes dropping blocks + rescaling exact for every family.  On the
+        kernel path the fused single-pass pipeline is preferred whenever
+        the family provides one.
         """
-        a_t = self.apply(state, a, use_kernels=use_kernels)
         if use_kernels:
-            from repro.kernels import ops as kops
             if survivors is None:
-                survivors = jnp.ones((a_t.shape[0],), bool)
-            return kops.oversketch_gram(a_t, survivors)
+                survivors = jnp.ones((self.cfg.total_blocks,), bool)
+            fused = self.gram_fused(state, a, survivors)
+            if fused is not None:
+                return fused
+            a_t = self.apply(state, a, use_kernels=True)
+            return core_sketch.sketched_gram(a_t, survivors,
+                                             use_kernels=True)
+        a_t = self.apply(state, a)
         return core_sketch.sketched_gram(a_t, survivors)
 
     # ------------------------------------------------------------------ cost

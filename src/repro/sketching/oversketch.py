@@ -35,3 +35,12 @@ class OverSketchFamily(SketchFamily):
             return kops.count_sketch_apply(state.h, state.sigma, a,
                                            self.cfg.block_size)
         return core_sketch.apply_sketch(state, a)
+
+    def gram_fused(self, state: core_sketch.CountSketch, a: jax.Array,
+                   survivors: jax.Array):
+        from repro.kernels import ops as kops
+        from repro.kernels.sketch_gram import fits_fused_vmem
+        if not fits_fused_vmem(self.cfg.block_size, a.shape[1]):
+            return None   # resident (d,d) output past VMEM: unfused tiles d
+        return kops.sketch_gram_count(state.h, state.sigma, a,
+                                      self.cfg.block_size, survivors)

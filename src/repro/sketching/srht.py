@@ -63,6 +63,18 @@ class SRHTFamily(SketchFamily):
 
         return jax.lax.map(one, (state["sigma"], state["rows"]))
 
+    def gram_fused(self, state: dict, a: jax.Array,
+                   survivors: jax.Array):
+        # Streaming mix: the b sampled Hadamard rows are regenerated per
+        # row-panel inside the kernel, so neither the (n_pad, d) mixed
+        # panel nor A_tilde ever reaches HBM.
+        from repro.kernels import ops as kops
+        from repro.kernels.sketch_gram import fits_fused_vmem
+        if not fits_fused_vmem(self.cfg.block_size, a.shape[1]):
+            return None   # resident (d,d) output past VMEM: unfused tiles d
+        return kops.sketch_gram_srht(state["rows"], state["sigma"], a,
+                                     survivors)
+
     def apply_flops(self, num_rows: int, d: int) -> float:
         n_pad = next_pow2(num_rows)
         return float(n_pad * max(1, int(math.log2(n_pad))) * d)

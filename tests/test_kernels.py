@@ -104,6 +104,164 @@ def test_coded_matvec_shapes(w, b, s):
                                rtol=1e-4, atol=1e-4)
 
 
+# --------------------------------------------------- fused sketch->gram
+def _sketch_inputs(seed, k, n, d, b, n_pad_srht=None):
+    key = jax.random.PRNGKey(seed)
+    kh, ks, ka, kr, km = jax.random.split(key, 5)
+    h = jax.random.randint(kh, (k, n), 0, b, dtype=jnp.int32)
+    sigma = jax.random.rademacher(ks, (k, n), dtype=jnp.float32)
+    # 1/sqrt(n) row scale keeps Gram entries O(1) so the <= 1e-4 max-abs
+    # acceptance bound is an absolute float32 figure, not a moving target.
+    a = jax.random.normal(ka, (n, d)) / jnp.sqrt(jnp.asarray(n, jnp.float32))
+    n_pad = n_pad_srht or (1 << max(0, (n - 1).bit_length()))
+    rows = jax.random.randint(kr, (k, b), 0, n_pad, dtype=jnp.int32)
+    surv = jax.random.bernoulli(km, 0.6, (k,)).at[0].set(True)
+    return h, sigma, a, rows, surv
+
+
+@pytest.mark.parametrize("k,n,d,b", [
+    (2, 128, 32, 64),
+    (4, 700, 37, 64),      # non-power-of-two n, ragged d
+    (3, 1000, 130, 128),   # d % 128 != 0 on both sides of a tile
+    (5, 520, 64, 256),     # n % tile_n != 0
+])
+def test_sketch_gram_count_fused_matches_unfused(k, n, d, b):
+    h, sigma, a, _, surv = _sketch_inputs(k * 7 + n, k, n, d, b)
+    out = ops.sketch_gram_count(h, sigma, a, b, surv)
+    expect = ref.sketch_gram_count(h, sigma, a, b, surv)
+    assert out.shape == (d, d)
+    assert float(jnp.abs(out - expect).max()) <= 1e-4
+
+
+@pytest.mark.parametrize("k,n,d,b", [
+    (2, 64, 20, 32),
+    (3, 700, 37, 64),      # non-power-of-two n (pads to 1024 internally)
+    (2, 1024, 130, 128),   # ragged d
+])
+def test_sketch_gram_srht_fused_matches_unfused(k, n, d, b):
+    _, sigma, a, rows, surv = _sketch_inputs(k * 11 + n, k, n, d, b)
+    out = ops.sketch_gram_srht(rows, sigma, a, surv)
+    expect = ref.sketch_gram_srht(rows, sigma, a, surv)
+    assert out.shape == (d, d)
+    assert float(jnp.abs(out - expect).max()) <= 1e-4
+
+
+def test_sketch_gram_single_survivor():
+    k, n, d, b = 4, 300, 24, 64
+    h, sigma, a, rows, _ = _sketch_inputs(0, k, n, d, b)
+    surv = jnp.zeros((k,), bool).at[2].set(True)
+    for out, expect in [
+        (ops.sketch_gram_count(h, sigma, a, b, surv),
+         ref.sketch_gram_count(h, sigma, a, b, surv)),
+        (ops.sketch_gram_srht(rows, sigma, a, surv),
+         ref.sketch_gram_srht(rows, sigma, a, surv)),
+    ]:
+        assert float(jnp.abs(out - expect).max()) <= 1e-4
+
+
+def test_sketch_gram_all_masked_is_safe():
+    k, n, d, b = 3, 200, 16, 64
+    h, sigma, a, rows, _ = _sketch_inputs(1, k, n, d, b)
+    surv = jnp.zeros((k,), bool)
+    assert np.isfinite(
+        np.asarray(ops.sketch_gram_count(h, sigma, a, b, surv))).all()
+    assert np.isfinite(
+        np.asarray(ops.sketch_gram_srht(rows, sigma, a, surv))).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sketch_gram_dtypes(dtype):
+    k, n, d, b = 2, 256, 40, 64
+    h, sigma, a, rows, surv = _sketch_inputs(2, k, n, d, b)
+    a = a.astype(dtype)
+    # Both kernels accumulate in float32, so after the (exact) bf16->f32
+    # cast they must match the f32 oracle on the same cast values.
+    a32 = a.astype(jnp.float32)
+    out_c = ops.sketch_gram_count(h, sigma, a, b, surv)
+    np.testing.assert_allclose(
+        np.asarray(out_c), np.asarray(ref.sketch_gram_count(h, sigma, a32,
+                                                            b, surv)),
+        rtol=1e-4, atol=1e-4)
+    out_s = ops.sketch_gram_srht(rows, sigma, a, surv)
+    np.testing.assert_allclose(
+        np.asarray(out_s), np.asarray(ref.sketch_gram_srht(rows, sigma,
+                                                           a32, surv)),
+        rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ two-pass fwht
+@pytest.mark.parametrize("k,n,d", [
+    (2, 64, 20),       # tiny d (pads to one 128 lane tile)
+    (1, 1024, 130),    # d % tile_d != 0
+    (2, 2048, 17),
+    (1, 4096, 256),
+])
+def test_fwht_two_pass_matches_butterfly_oracle(k, n, d):
+    x = jax.random.normal(jax.random.PRNGKey(n + d), (k, n, d))
+    np.testing.assert_allclose(np.asarray(ops.fwht_two_pass(x)),
+                               np.asarray(ref.fwht(x)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fwht_two_pass_rejects_non_pow2():
+    with pytest.raises(ValueError, match="power of two"):
+        ops.fwht_two_pass(jnp.zeros((1, 100, 4)))
+
+
+def test_fwht_dispatches_two_pass_beyond_panel_budget():
+    """An n whose monolithic (n, td) panel exceeds the documented VMEM
+    budget must still go through ops.fwht (via the two-pass kernel) and
+    match the oracle."""
+    from repro.kernels.srht import MAX_PANEL_BYTES, panel_vmem_bytes
+    n = 32768
+    assert panel_vmem_bytes(n, d=8) > MAX_PANEL_BYTES
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, n, 8))
+    np.testing.assert_allclose(np.asarray(ops.fwht(x)),
+                               np.asarray(ref.fwht(x)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fwht_two_pass_is_involution():
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 512, 64))
+    y = ops.fwht_two_pass(ops.fwht_two_pass(x))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------- dtype sweep, remaining entry points
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_dtypes_both_paths(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 256, 40)).astype(dtype)
+    expect = ref.fwht(x.astype(jnp.float32))
+    for out in (ops.fwht(x), ops.fwht_two_pass(x)):
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_oversketch_gram_dtypes(dtype):
+    key = jax.random.PRNGKey(9)
+    a_t = (jax.random.normal(key, (3, 64, 40)) / 8.0).astype(dtype)
+    surv = jnp.ones((3,), bool).at[1].set(False)
+    out = ops.oversketch_gram(a_t, surv)
+    expect = ref.oversketch_gram(a_t.astype(jnp.float32), surv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_coded_matvec_dtypes(dtype):
+    key = jax.random.PRNGKey(10)
+    enc = (jax.random.normal(key, (4, 32, 200)) / 14.0).astype(dtype)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (200,)).astype(dtype)
+    erased = jnp.zeros((4,), bool).at[2].set(True)
+    out = ops.coded_block_matvec(enc, x, erased)
+    expect = ref.coded_block_matvec(enc.astype(jnp.float32),
+                                    x.astype(jnp.float32), erased)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
 # ------------------------------------------- end-to-end kernels inside newton
 def test_newton_with_kernels_matches_reference_path():
     from repro.core import (Dataset, LogisticRegression, NewtonConfig,

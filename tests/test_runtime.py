@@ -134,6 +134,76 @@ def test_newton_converges_under_failures_and_cold_starts():
     assert res0.history["time"][-1] < res.history["time"][-1]
 
 
+# --------------------------------------------------------- pipeline overlap
+def test_not_before_overlap_makespan_not_longer():
+    """run_phase(not_before=t) launches a phase in the past: the clock
+    advances to max(now, t + elapsed), so an overlapped schedule is never
+    slower than the sequential one — and billing is identical (overlap
+    moves work on the timeline, it does not unbill it)."""
+    key = jax.random.PRNGKey(21)
+    k2 = jax.random.fold_in(key, 1)
+
+    seq = SimClock(StragglerModel())
+    seq.phase(key, 16, policy="wait_all", flops_per_worker=2e5)
+    seq.phase(k2, 16, policy="wait_all", flops_per_worker=2e5)
+
+    ovl = SimClock(StragglerModel())
+    ovl.phase(key, 16, policy="wait_all", flops_per_worker=2e5)
+    ovl.phase(k2, 16, policy="wait_all", flops_per_worker=2e5,
+              not_before=0.0)
+    assert ovl.time < seq.time          # equal-work phases overlap strictly
+    assert ovl.dollars == seq.dollars
+
+
+def test_not_before_fully_hidden_phase_is_free_in_time():
+    key = jax.random.PRNGKey(22)
+    clock = SimClock(StragglerModel())
+    clock.phase(key, 16, policy="wait_all", flops_per_worker=1e6)
+    t = clock.time
+    d = clock.dollars
+    # A short phase launched at time 0 finished long ago: no clock motion.
+    e, _ = clock.phase(jax.random.fold_in(key, 1), 4, policy="wait_all",
+                       flops_per_worker=1e3, not_before=0.0)
+    assert e > 0
+    assert clock.time == t
+    assert clock.dollars > d            # still billed
+
+
+def test_overlapped_phases_replay_bit_exact(tmp_path):
+    def drive(clock):
+        clock.phase(jax.random.PRNGKey(0), 12, policy="wait_all",
+                    flops_per_worker=3e5)
+        clock.phase(jax.random.PRNGKey(1), 12, policy="k_of_n", k=10,
+                    flops_per_worker=3e5, not_before=0.0)
+        return clock
+
+    rec = TraceRecorder()
+    recorded = drive(SimClock(StragglerModel(), recorder=rec))
+    path = tmp_path / "overlap.jsonl"
+    rec.dump(path)
+    replayed = drive(SimClock(StragglerModel(), replay=load_trace(path)))
+    assert replayed.time == recorded.time
+    assert replayed.dollars == recorded.dollars
+
+
+def test_newton_overlap_encode_no_slower_same_iterates():
+    """The coded-matvec master's one-time encodes (Sec. 4.1) hide behind
+    compute when overlap_encode=True: same iterates, makespan <= the
+    serialized schedule."""
+    data = _logistic(jax.random.PRNGKey(23), n=600, d=12)
+    obj = LogisticRegression(lam=1e-4)
+    base = dict(iters=3, sketch=OverSketchConfig(256, 64, 0.25),
+                coded_block_rows=64)
+    r_ovl = oversketched_newton(obj, data, jnp.zeros(12),
+                                NewtonConfig(**base))
+    r_seq = oversketched_newton(obj, data, jnp.zeros(12),
+                                NewtonConfig(overlap_encode=False, **base))
+    assert r_ovl.history["fval"] == r_seq.history["fval"]
+    assert r_ovl.history["time"][-1] <= r_seq.history["time"][-1]
+    assert r_ovl.history["cost"][-1] == pytest.approx(
+        r_seq.history["cost"][-1])
+
+
 # ------------------------------------------------------------ record/replay
 def test_phase_replay_is_bit_exact(tmp_path):
     def drive(clock):

@@ -98,6 +98,81 @@ def test_kernel_path_matches_reference(name):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("name", ("oversketch", "srht"))
+def test_gram_fused_matches_gram(name):
+    """Families with a fused streaming kernel: gram(use_kernels=True)
+    (which prefers gram_fused) == the plain apply+gram path, under a
+    partial survivor mask."""
+    key = jax.random.PRNGKey(6)
+    n = 300
+    a = jax.random.normal(key, (n, 20)) / np.sqrt(n)
+    fam = sketching.get(name, _cfg(256, 64, 0.25))
+    state = fam.sample(jax.random.fold_in(key, 2), n)
+    surv = jnp.arange(fam.cfg.total_blocks) % 2 == 0
+    fused = fam.gram_fused(state, a, surv)
+    assert fused is not None
+    plain = fam.gram(state, a, surv, use_kernels=False)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(plain),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(fam.gram(state, a, surv, use_kernels=True)),
+        np.asarray(fused), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", ("oversketch", "srht"))
+def test_gram_fused_declines_past_vmem_budget(name):
+    """Beyond the documented fused-kernel VMEM budget (the resident (d,d)
+    output) gram_fused returns None so the kernel path tiles d via the
+    unfused pair instead of failing to compile on hardware."""
+    from repro.kernels.sketch_gram import fits_fused_vmem
+    key = jax.random.PRNGKey(9)
+    n, d = 64, 2048
+    fam = sketching.get(name, _cfg(128, 64, 0.25))
+    assert not fits_fused_vmem(fam.cfg.block_size, d)
+    assert fits_fused_vmem(fam.cfg.block_size, 512)
+    a = jax.random.normal(key, (n, d)) / np.sqrt(n)
+    state = fam.sample(jax.random.fold_in(key, 1), n)
+    surv = jnp.ones((fam.cfg.total_blocks,), bool)
+    assert fam.gram_fused(state, a, surv) is None
+    np.testing.assert_allclose(
+        np.asarray(fam.gram(state, a, surv, use_kernels=True)),
+        np.asarray(fam.gram(state, a, surv, use_kernels=False)),
+        rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ("sjlt", "gaussian", "nystrom", "leverage"))
+def test_gram_kernel_fallback_without_fused(name):
+    """Families without a fused kernel return None from gram_fused and the
+    kernel path falls back to apply + masked-Gram kernel."""
+    key = jax.random.PRNGKey(7)
+    n = 200
+    a = jax.random.normal(key, (n, 12))
+    fam = sketching.get(name, _cfg(256, 64, 0.25))
+    state = fam.sample(jax.random.fold_in(key, 3), n)
+    surv = jnp.ones((fam.cfg.total_blocks,), bool).at[0].set(False)
+    assert fam.gram_fused(state, a, surv) is None
+    np.testing.assert_allclose(
+        np.asarray(fam.gram(state, a, surv, use_kernels=True)),
+        np.asarray(fam.gram(state, a, surv, use_kernels=False)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_core_oversketched_gram_fused_routing():
+    """core.sketch.oversketched_gram(use_kernels=True) takes the fused
+    kernel end-to-end and agrees with the reference composition."""
+    from repro.core import sketch as core_sketch
+    key = jax.random.PRNGKey(8)
+    n = 400
+    a = jax.random.normal(key, (n, 16)) / np.sqrt(n)
+    cfg = _cfg(256, 64, 0.25)
+    kf = jax.random.fold_in(key, 1)
+    surv = jnp.ones((cfg.total_blocks,), bool).at[1].set(False)
+    fused = core_sketch.oversketched_gram(kf, a, cfg, surv, use_kernels=True)
+    plain = core_sketch.oversketched_gram(kf, a, cfg, surv)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(plain),
+                               rtol=1e-4, atol=1e-4)
+
+
 # -------------------------------------------------------------- FWHT kernel
 @pytest.mark.parametrize("k,n,d", [(2, 8, 5), (3, 256, 17), (1, 512, 130)])
 def test_fwht_kernel_vs_butterfly_oracle(k, n, d):
