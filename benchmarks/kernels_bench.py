@@ -4,6 +4,19 @@ On this container the interpreter dominates wall-clock, so the *reference*
 implementations provide the meaningful CPU numbers and the Pallas variants
 are validated for correctness+shape coverage; on TPU the same harness times
 the compiled kernels.  Derived column reports achieved GFLOP/s of the ref.
+
+Every row carries a ``path`` field naming what actually executed, so the
+persisted BENCH_kernels.json trajectory is attributable row-by-row:
+
+  ref         pure-jnp oracle timing
+  pallas      Pallas entry point checked against the oracle (no timing)
+  unfused     the two-kernel apply+gram baseline the fusion replaces
+  fused       fused sketch->Gram, single resident output tile
+  fused_tiled fused sketch->Gram, d-tiled (d_i, d_j) output grid
+
+Pre-path-field BENCH files (before the d-tiled kernel) labelled the
+``*_fused`` rows by entry point alone; see kernels/README.md ("Reading
+BENCH_kernels.json") for the discontinuity note.
 """
 from __future__ import annotations
 
@@ -14,6 +27,71 @@ import jax.numpy as jnp
 
 from benchmarks.common import time_fn
 from repro.kernels import ops, ref
+
+
+def _fused_inputs(key, kg, ng, dg, bg, s=None):
+    """Shared draw for the fused sketch->Gram rows; the 1/sqrt(n) row scale
+    keeps Gram entries O(1) so max_err is an absolute float32 figure."""
+    kh, ks, ka, kr, kj = jax.random.split(key, 5)
+    h = jax.random.randint(kh, (kg, ng), 0, bg, dtype=jnp.int32)
+    sg = jax.random.rademacher(ks, (kg, ng), dtype=jnp.float32)
+    a = jax.random.normal(ka, (ng, dg)) / math.sqrt(ng)
+    n_pad = 1 << (ng - 1).bit_length()
+    rows = jax.random.randint(kr, (kg, bg), 0, n_pad, dtype=jnp.int32)
+    sjlt = None
+    if s is not None:
+        hj = jax.random.randint(kj, (kg, s, ng), 0, bg, dtype=jnp.int32)
+        sj = jax.random.rademacher(jax.random.fold_in(kj, 1), (kg, s, ng),
+                                   dtype=jnp.float32)
+        sjlt = (hj, sj)
+    surv = jnp.ones((kg,), bool).at[0].set(False)
+    return h, sg, a, rows, sjlt, surv, n_pad
+
+
+def _fused_rows(rows, tag, key, kg, ng, dg, bg, s, iters):
+    """Unfused-ref + fused rows for all three encode families at one shape.
+
+    Flop counts match what each implementation actually executes: fused
+    kernel = dense encode matmul + gram, recomputed once per output
+    row/column of d tiles; scatter-style count ref = one signed add per
+    element; FWHT ref = butterfly.
+    """
+    h, sg, a, rws, (hj, sj), surv, n_pad = _fused_inputs(
+        key, kg, ng, dg, bg, s=s)
+    gram_fl = 2.0 * kg * bg * dg * dg
+    d_tile = ops.pick_d_tile(bg, dg)
+    d_tiles = -(-dg // d_tile)
+    path = ops.fused_path(bg, dg)
+    # Tiled grid recomputes the encode matmul once per off-diagonal panel:
+    # (2*d_tiles - 1) x the single-tile encode work (see kernels/README.md).
+    flops_fused = 2.0 * kg * ng * bg * dg * (2.0 * d_tiles - 1.0) + gram_fl
+    shape = f"shape=({kg},{ng},{dg},{bg})"
+
+    cases = [
+        ("count", lambda: ref.sketch_gram_count(h, sg, a, bg, surv),
+         lambda: ops.sketch_gram_count(h, sg, a, bg, surv),
+         2.0 * kg * ng * dg + gram_fl),
+        ("srht", lambda: ref.sketch_gram_srht(rws, sg, a, surv),
+         lambda: ops.sketch_gram_srht(rws, sg, a, surv),
+         kg * n_pad * math.log2(n_pad) * dg + gram_fl),
+        ("sjlt", lambda: ref.sketch_gram_sjlt(hj, sj, a, bg, surv),
+         lambda: ops.sketch_gram_sjlt(hj, sj, a, bg, surv),
+         2.0 * kg * s * ng * dg + gram_fl),
+    ]
+    for fam, f_ref, f_fus, flops_ref in cases:
+        f_unf = jax.jit(f_ref)
+        us_unf = time_fn(f_unf)
+        rows.append({"name": f"kernel_sketch_gram_{fam}_unfused_ref{tag}",
+                     "us": us_unf, "path": "unfused",
+                     "derived": (f"gflops={flops_ref/us_unf/1e3:.2f};"
+                                 f"{shape}")})
+        us_fus = time_fn(f_fus, iters=iters, warmup=1)
+        err = float(jnp.abs(f_fus() - f_unf()).max())
+        rows.append({"name": f"kernel_sketch_gram_{fam}_fused{tag}",
+                     "us": us_fus, "path": path,
+                     "derived": (f"gflops={flops_fused/us_fus/1e3:.2f};"
+                                 f"max_err={err:.2e};d_tile={d_tile};"
+                                 f"{shape}")})
 
 
 def run(quick: bool = True):
@@ -29,13 +107,13 @@ def run(quick: bool = True):
     f_ref = jax.jit(lambda: ref.count_sketch_apply(h, sg, a, b))
     us = time_fn(f_ref)
     flops = 2.0 * k * n * d
-    rows.append({"name": "kernel_count_sketch_ref", "us": us,
+    rows.append({"name": "kernel_count_sketch_ref", "us": us, "path": "ref",
                  "derived": f"gflops={flops/us/1e3:.2f};shape=({k},{n},{d})"})
     out_p = ops.count_sketch_apply(h, sg, a, b)
     out_r = f_ref()
     err = float(jnp.abs(out_p - out_r).max())
     rows.append({"name": "kernel_count_sketch_pallas_check", "us": 0.0,
-                 "derived": f"max_err={err:.2e}"})
+                 "path": "pallas", "derived": f"max_err={err:.2e}"})
 
     # oversketch gram
     a_t = jax.random.normal(key, (k, b, d))
@@ -44,54 +122,27 @@ def run(quick: bool = True):
     us2 = time_fn(f_ref2)
     flops2 = 2.0 * k * b * d * d
     rows.append({"name": "kernel_oversketch_gram_ref", "us": us2,
-                 "derived": f"gflops={flops2/us2/1e3:.2f}"})
+                 "path": "ref", "derived": f"gflops={flops2/us2/1e3:.2f}"})
     err2 = float(jnp.abs(ops.oversketch_gram(a_t, surv) - f_ref2()).max())
     rows.append({"name": "kernel_oversketch_gram_pallas_check", "us": 0.0,
-                 "derived": f"max_err={err2:.2e}"})
+                 "path": "pallas", "derived": f"max_err={err2:.2e}"})
 
     # fused sketch->gram streaming kernel vs unfused apply+gram (the
-    # two-HBM-round-trip baseline it replaces).  The 1/sqrt(n) row scale
-    # keeps Gram entries O(1) so max_err is an absolute float32 figure.
-    kg, ng, dg, bg = (6, 4096, 256, 256) if quick else (10, 20_000, 512, 512)
-    kh2, ks2, ka2, kr2 = jax.random.split(jax.random.fold_in(key, 2), 4)
-    h2 = jax.random.randint(kh2, (kg, ng), 0, bg, dtype=jnp.int32)
-    sg2 = jax.random.rademacher(ks2, (kg, ng), dtype=jnp.float32)
-    a2 = jax.random.normal(ka2, (ng, dg)) / math.sqrt(ng)
-    surv = jnp.ones((kg,), bool).at[0].set(False)
-    gram_fl = 2.0 * kg * bg * dg * dg
-    # Per-row flop counts match what each implementation actually executes:
-    # fused kernel = dense encode matmul + gram; scatter-style count ref =
-    # one signed add per element; FWHT ref = butterfly.
-    flops_fused = 2.0 * kg * ng * bg * dg + gram_fl
-    flops_count_ref = 2.0 * kg * ng * dg + gram_fl
-    n_pad_s = 1 << (ng - 1).bit_length()
-    flops_srht_ref = kg * n_pad_s * math.log2(n_pad_s) * dg + gram_fl
-    f_unf = jax.jit(lambda: ref.sketch_gram_count(h2, sg2, a2, bg, surv))
-    us_unf = time_fn(f_unf)
-    rows.append({"name": "kernel_sketch_gram_count_unfused_ref",
-                 "us": us_unf,
-                 "derived": (f"gflops={flops_count_ref/us_unf/1e3:.2f};"
-                             f"shape=({kg},{ng},{dg},{bg})")})
-    f_fus = lambda: ops.sketch_gram_count(h2, sg2, a2, bg, surv)
-    us_fus = time_fn(f_fus, iters=3, warmup=1)
-    err_f = float(jnp.abs(f_fus() - f_unf()).max())
-    rows.append({"name": "kernel_sketch_gram_count_fused", "us": us_fus,
-                 "derived": (f"gflops={flops_fused/us_fus/1e3:.2f};"
-                             f"max_err={err_f:.2e}")})
-
-    rws = jax.random.randint(kr2, (kg, bg), 0, n_pad_s, dtype=jnp.int32)
-    f_unf_s = jax.jit(lambda: ref.sketch_gram_srht(rws, sg2, a2, surv))
-    us_unf_s = time_fn(f_unf_s)
-    rows.append({"name": "kernel_sketch_gram_srht_unfused_ref",
-                 "us": us_unf_s,
-                 "derived": (f"gflops={flops_srht_ref/us_unf_s/1e3:.2f};"
-                             f"shape=({kg},{ng},{dg},{bg})")})
-    f_fus_s = lambda: ops.sketch_gram_srht(rws, sg2, a2, surv)
-    us_fus_s = time_fn(f_fus_s, iters=3, warmup=1)
-    err_s = float(jnp.abs(f_fus_s() - f_unf_s()).max())
-    rows.append({"name": "kernel_sketch_gram_srht_fused", "us": us_fus_s,
-                 "derived": (f"gflops={flops_fused/us_fus_s/1e3:.2f};"
-                             f"max_err={err_s:.2e}")})
+    # two-HBM-round-trip baseline it replaces), all three encode families.
+    # First shape fits one resident output tile (path=fused); the second
+    # puts d above the old single-tile budget so the d-tiled grid runs
+    # (path=fused_tiled) — pre-tiling code silently never fused there.
+    s = 4
+    if quick:
+        _fused_rows(rows, "", jax.random.fold_in(key, 2),
+                    6, 4096, 256, 256, s, iters=3)
+        _fused_rows(rows, "_bigd", jax.random.fold_in(key, 3),
+                    2, 1024, 1536, 128, s, iters=2)
+    else:
+        _fused_rows(rows, "", jax.random.fold_in(key, 2),
+                    10, 20_000, 512, 512, s, iters=3)
+        _fused_rows(rows, "_bigd", jax.random.fold_in(key, 3),
+                    4, 4096, 2048, 256, s, iters=2)
 
     # srht fwht (blocked Kronecker-matmul kernel vs butterfly oracle)
     kf, nf, df = (4, 1024, 256) if quick else (8, 8192, 1000)
@@ -99,11 +150,11 @@ def run(quick: bool = True):
     f_ref_f = jax.jit(lambda: ref.fwht(xf))
     usf = time_fn(f_ref_f)
     flopsf = kf * nf * math.log2(nf) * df
-    rows.append({"name": "kernel_fwht_ref", "us": usf,
+    rows.append({"name": "kernel_fwht_ref", "us": usf, "path": "ref",
                  "derived": f"gflops={flopsf/usf/1e3:.2f};shape=({kf},{nf},{df})"})
     errf = float(jnp.abs(ops.fwht(xf) - f_ref_f()).max())
     rows.append({"name": "kernel_fwht_pallas_check", "us": 0.0,
-                 "derived": f"max_err={errf:.2e}"})
+                 "path": "pallas", "derived": f"max_err={errf:.2e}"})
 
     # two-pass tiled fwht (streams O(sqrt(n)) VMEM panels; the compile
     # path for n beyond the monolithic kernel's panel budget)
@@ -113,20 +164,21 @@ def run(quick: bool = True):
     us2p = time_fn(f_2p, iters=3, warmup=1)
     err2p = float(jnp.abs(f_2p() - ref.fwht(x2p)).max())
     rows.append({"name": "kernel_fwht_two_pass", "us": us2p,
+                 "path": "pallas",
                  "derived": (f"max_err={err2p:.2e};"
                              f"shape=({k2p},{n2p},{d2p})")})
 
     # coded matvec
-    w, bb, s = (25, 128, 2048) if quick else (64, 256, 8192)
-    enc = jax.random.normal(key, (w, bb, s))
-    x = jax.random.normal(kh, (s,))
+    w, bb, ss = (25, 128, 2048) if quick else (64, 256, 8192)
+    enc = jax.random.normal(key, (w, bb, ss))
+    x = jax.random.normal(kh, (ss,))
     er = jnp.zeros((w,), bool).at[3].set(True)
     f_ref3 = jax.jit(lambda: ref.coded_block_matvec(enc, x, er))
     us3 = time_fn(f_ref3)
     gb = enc.size * 4 / 1e9
-    rows.append({"name": "kernel_coded_matvec_ref", "us": us3,
+    rows.append({"name": "kernel_coded_matvec_ref", "us": us3, "path": "ref",
                  "derived": f"gbps={gb/(us3/1e6):.2f}"})
     err3 = float(jnp.abs(ops.coded_block_matvec(enc, x, er) - f_ref3()).max())
     rows.append({"name": "kernel_coded_matvec_pallas_check", "us": 0.0,
-                 "derived": f"max_err={err3:.2e}"})
+                 "path": "pallas", "derived": f"max_err={err3:.2e}"})
     return rows

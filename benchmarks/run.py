@@ -70,6 +70,12 @@ def main(argv=None) -> int:
             print(f"{r['name']},{r['us']:.1f},{r['derived']}")
         if mod_name in PERSIST_JSON:
             import jax
+            # Every persisted row carries a ``path`` field naming what
+            # actually executed (fused | fused_tiled | unfused | ref |
+            # pallas) so the perf trajectory is attributable; backfill
+            # rows from modules that predate the field.
+            for r in rows:
+                r.setdefault("path", "unknown")
             payload = {
                 "meta": {
                     "module": mod_name,

@@ -236,8 +236,11 @@ def _jitted_sketched_hessian(objective, family: "sketching.SketchFamily",
 
     With ``use_kernels`` the Hessian build prefers the family's fused
     streaming sketch->Gram kernel (``SketchFamily.gram_fused``: one pass
-    over hess_sqrt rows, A_tilde never materialized in HBM); families
-    without a fused path fall back to the two-kernel apply+gram chain."""
+    over hess_sqrt rows, A_tilde never materialized in HBM).  The kernel
+    d-tiles its output grid, so oversketch/srht/sjlt take the fused path
+    for EVERY d (``SketchFamily.fused_path(d)`` reports "fused" vs
+    "fused_tiled"); families without an encode-matrix form fall back to
+    the two-kernel apply+gram chain ("unfused")."""
     def fn(w, data, state, survivors):
         a = objective.hess_sqrt(w, data)
         d = a.shape[1]

@@ -173,20 +173,16 @@ def oversketched_gram(key: jax.Array, a: jax.Array, cfg: OverSketchConfig,
     ``use_kernels`` takes the fused streaming pipeline
     (``kernels.sketch_gram``): row-panels of A are sketched block-locally
     and the masked Gram accumulates in VMEM — A_tilde never hits HBM.
+    The kernel's output grid is d-tiled, so the fused path runs for every
+    d (``pick_d_tile`` sizes the resident tile to the VMEM budget).
     """
     cs = sample_countsketch(key, a.shape[0], cfg)
     if use_kernels:
         from repro.kernels import ops as kops
-        from repro.kernels.sketch_gram import fits_fused_vmem
         if survivors is None:
             survivors = jnp.ones((cs.total_blocks,), dtype=bool)
-        if fits_fused_vmem(cfg.block_size, a.shape[1]):
-            return kops.sketch_gram_count(cs.h, cs.sigma, a,
-                                          cfg.block_size, survivors)
-        # Past the fused kernel's VMEM budget (resident (d,d) output):
-        # unfused apply + masked-Gram pair, which tiles d.
-        a_t = kops.count_sketch_apply(cs.h, cs.sigma, a, cfg.block_size)
-        return kops.oversketch_gram(a_t, survivors)
+        return kops.sketch_gram_count(cs.h, cs.sigma, a,
+                                      cfg.block_size, survivors)
     return sketched_gram(apply_sketch(cs, a), survivors)
 
 

@@ -42,20 +42,47 @@ def oversketch_gram(a_tilde: jax.Array, survivors: jax.Array,
 
 def sketch_gram_count(h: jax.Array, sigma: jax.Array, a: jax.Array,
                       block_size: int, survivors: jax.Array,
-                      interpret: Optional[bool] = None) -> jax.Array:
+                      interpret: Optional[bool] = None,
+                      tile_n: int = _sg.DEFAULT_TILE_N,
+                      d_tile: Optional[int] = None) -> jax.Array:
     """Fused count-sketch Gram (K,n),(K,n),(n,d),(K,) -> (d,d); A_tilde
-    never hits HBM (streaming apply + in-register masked Gram)."""
+    never hits HBM (streaming apply + in-register masked Gram).  The
+    output is d-tiled past the VMEM budget (``d_tile`` defaults to
+    ``pick_d_tile``; see ``fused_path`` for which grid a shape gets)."""
     return _sg.sketch_gram_count(h, sigma, a, block_size, survivors,
+                                 tile_n=tile_n, d_tile=d_tile,
                                  interpret=_interpret(interpret))
+
+
+def sketch_gram_sjlt(h: jax.Array, sigma: jax.Array, a: jax.Array,
+                     block_size: int, survivors: jax.Array,
+                     interpret: Optional[bool] = None,
+                     tile_n: int = _sg.DEFAULT_TILE_N,
+                     d_tile: Optional[int] = None) -> jax.Array:
+    """Fused SJLT Gram (K,s,n),(K,s,n),(n,d),(K,) -> (d,d); the s signed
+    one-hot layers are summed into the encode matrix in VMEM."""
+    return _sg.sketch_gram_sjlt(h, sigma, a, block_size, survivors,
+                                tile_n=tile_n, d_tile=d_tile,
+                                interpret=_interpret(interpret))
 
 
 def sketch_gram_srht(rows: jax.Array, sigma: jax.Array, a: jax.Array,
                      survivors: jax.Array,
-                     interpret: Optional[bool] = None) -> jax.Array:
+                     interpret: Optional[bool] = None,
+                     tile_n: int = _sg.DEFAULT_TILE_N,
+                     d_tile: Optional[int] = None) -> jax.Array:
     """Fused SRHT Gram (K,b),(K,n),(n,d),(K,) -> (d,d); the Hadamard mix
     rows are regenerated block-locally so the mixed panel never exists."""
     return _sg.sketch_gram_srht(rows, sigma, a, survivors,
+                                tile_n=tile_n, d_tile=d_tile,
                                 interpret=_interpret(interpret))
+
+
+# Grid-choice helpers, re-exported for benchmarks and tests: which fused
+# grid a (block_size, d) problem gets ("fused" single-tile vs
+# "fused_tiled") and the d_tile the default routing picks.
+fused_path = _sg.fused_path
+pick_d_tile = _sg.pick_d_tile
 
 
 def fwht(x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:

@@ -20,6 +20,27 @@ def count_sketch_apply(h: jax.Array, sigma: jax.Array, a: jax.Array,
     return jax.vmap(one)(h, sigma)
 
 
+def sjlt_apply(h: jax.Array, sigma: jax.Array, a: jax.Array,
+               block_size: int) -> jax.Array:
+    """SJLT (OSNAP) apply: s signed segment-sum layers per block, / sqrt(s).
+
+    h:     (K, s, n) int32 bucket indices in [0, block_size)
+    sigma: (K, s, n) Rademacher signs
+    a:     (n, d)
+    ->     (K, block_size, d)
+    """
+    s = h.shape[1]
+
+    def one(hk, sk):
+        def slot(ht, st):
+            return jax.ops.segment_sum(a * st[:, None].astype(a.dtype), ht,
+                                       num_segments=block_size)
+        return jax.vmap(slot)(hk, sk).sum(axis=0)
+
+    out = jax.vmap(one)(h, sigma)
+    return out / jnp.sqrt(jnp.asarray(float(s), out.dtype))
+
+
 def oversketch_gram(a_tilde: jax.Array, survivors: jax.Array) -> jax.Array:
     """H_hat = (1/N_avail) sum_k m_k A_tilde_k^T A_tilde_k.
 
@@ -87,6 +108,12 @@ def sketch_gram_srht(rows: jax.Array, sigma: jax.Array, a: jax.Array,
                      survivors: jax.Array) -> jax.Array:
     """Unfused apply+gram composition: the fused SRHT oracle."""
     return oversketch_gram(srht_apply(rows, sigma, a), survivors)
+
+
+def sketch_gram_sjlt(h: jax.Array, sigma: jax.Array, a: jax.Array,
+                     block_size: int, survivors: jax.Array) -> jax.Array:
+    """Unfused apply+gram composition: the fused SJLT oracle."""
+    return oversketch_gram(sjlt_apply(h, sigma, a, block_size), survivors)
 
 
 def coded_block_matvec(enc: jax.Array, x: jax.Array,

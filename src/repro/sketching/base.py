@@ -14,8 +14,12 @@ This module defines the protocol every family implements:
   apply(state, a)       -> (total_blocks, b, d) per-block  S_i^T A
   gram(state, a, survivors) -> (d, d) masked, rescaled Gram estimate
   gram_fused(state, a, survivors) -> (d, d) or None — optional fused
-      sketch->Gram Pallas path (A_tilde never materialized); families
-      without one return None and ``gram`` falls back to apply+gram
+      sketch->Gram Pallas path (A_tilde never materialized); the kernel's
+      d-tiled output grid means a family that has one takes it for ANY d.
+      Families without an encode-matrix form return None and ``gram``
+      falls back to apply+gram
+  fused_path(d)         -> str       which gram path use_kernels takes:
+      "fused" | "fused_tiled" | "unfused" (benchmark/bookkeeping hook)
   block_flops(num_rows, d) -> float  per-worker cost for the straggler clock
   comm_units(d)         -> float     per-worker master-I/O units
 
@@ -68,14 +72,32 @@ class SketchFamily(abc.ABC):
         """Per-block application A (n, d) -> (total_blocks, b, d), unscaled
         by 1/sqrt(N) (the survivor rescale in ``gram`` absorbs it)."""
 
+    # Families with a block-local encode-matrix form set this True (and
+    # override gram_fused); it drives fused_path reporting.
+    has_fused_gram = False
+
     def gram_fused(self, state: SketchState, a: jax.Array,
                    survivors: jax.Array) -> Optional[jax.Array]:
         """Fused streaming sketch->Gram (``kernels/sketch_gram.py``): the
         per-block panels ``A_tilde_i`` stay in VMEM and never round-trip
-        through HBM.  Families with a block-local encode-matrix form
-        (count-sketch scatter, SRHT mix) override this; the default None
-        routes ``gram`` through the two-kernel apply+gram fallback."""
+        through HBM.  The kernel tiles its output grid on d, so there is
+        no VMEM decline path — a family that overrides this takes the
+        fused kernel for every d.  Families without a block-local
+        encode-matrix form (count-sketch scatter, SJLT layers, SRHT mix)
+        keep the default None and ``gram`` routes through the two-kernel
+        apply+gram fallback."""
         return None
+
+    def fused_path(self, d: int) -> str:
+        """Which path ``gram(use_kernels=True)`` takes for width d:
+        ``"fused"`` (single resident output tile), ``"fused_tiled"``
+        (d-tiled (d_i, d_j) grid) or ``"unfused"`` (apply+gram pair).
+        Pure bookkeeping — benchmarks record it so perf rows are
+        attributable to the grid that actually ran."""
+        if not self.has_fused_gram:
+            return "unfused"
+        from repro.kernels.sketch_gram import fused_path as _fused_path
+        return _fused_path(self.cfg.block_size, d)
 
     def gram(self, state: SketchState, a: jax.Array,
              survivors: Optional[jax.Array] = None,

@@ -25,6 +25,8 @@ from repro.sketching.registry import register
 @dataclasses.dataclass(frozen=True)
 class OverSketchFamily(SketchFamily):
 
+    has_fused_gram = True
+
     def sample(self, key: jax.Array, num_rows: int) -> core_sketch.CountSketch:
         return core_sketch.sample_countsketch(key, num_rows, self.cfg)
 
@@ -38,9 +40,8 @@ class OverSketchFamily(SketchFamily):
 
     def gram_fused(self, state: core_sketch.CountSketch, a: jax.Array,
                    survivors: jax.Array):
+        # The kernel d-tiles its output grid, so the fused path runs for
+        # every d (pick_d_tile sizes the tile to the VMEM budget).
         from repro.kernels import ops as kops
-        from repro.kernels.sketch_gram import fits_fused_vmem
-        if not fits_fused_vmem(self.cfg.block_size, a.shape[1]):
-            return None   # resident (d,d) output past VMEM: unfused tiles d
         return kops.sketch_gram_count(state.h, state.sigma, a,
                                       self.cfg.block_size, survivors)

@@ -25,6 +25,7 @@ from repro.sketching.registry import register
 class SJLTFamily(SketchFamily):
 
     nnz_per_row: int = 4
+    has_fused_gram = True
 
     def sample(self, key: jax.Array, num_rows: int) -> dict:
         kh, ks = jax.random.split(key)
@@ -53,6 +54,20 @@ class SJLTFamily(SketchFamily):
                 return slots.sum(axis=0)
             out = jax.vmap(one_block)(state["h"], state["sigma"])
         return out / jnp.sqrt(jnp.asarray(float(self.nnz_per_row), out.dtype))
+
+    def gram_fused(self, state: dict, a: jax.Array,
+                   survivors: jax.Array):
+        # Encode-matrix form: the s signed one-hot layers are summed into
+        # a (tile_n, b) matrix in VMEM (count-sketch is the s = 1 slice of
+        # the same encoder), so SJLT rides the same fused streaming kernel
+        # as oversketch/srht — A_tilde never reaches HBM.
+        from repro.kernels import ops as kops
+        return kops.sketch_gram_sjlt(state["h"], state["sigma"], a,
+                                     self.cfg.block_size, survivors)
+
+    def fused_path(self, d: int) -> str:
+        from repro.kernels.sketch_gram import fused_path as _fused_path
+        return _fused_path(self.cfg.block_size, d, nnz=self.nnz_per_row)
 
     def apply_flops(self, num_rows: int, d: int) -> float:
         return 2.0 * self.nnz_per_row * num_rows * d

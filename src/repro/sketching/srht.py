@@ -29,6 +29,8 @@ from repro.sketching.registry import register
 @dataclasses.dataclass(frozen=True)
 class SRHTFamily(SketchFamily):
 
+    has_fused_gram = True
+
     def sample(self, key: jax.Array, num_rows: int) -> dict:
         ks, kp = jax.random.split(key)
         blocks = self.cfg.total_blocks
@@ -67,11 +69,9 @@ class SRHTFamily(SketchFamily):
                    survivors: jax.Array):
         # Streaming mix: the b sampled Hadamard rows are regenerated per
         # row-panel inside the kernel, so neither the (n_pad, d) mixed
-        # panel nor A_tilde ever reaches HBM.
+        # panel nor A_tilde ever reaches HBM; the d-tiled output grid
+        # keeps the fused path live for every d.
         from repro.kernels import ops as kops
-        from repro.kernels.sketch_gram import fits_fused_vmem
-        if not fits_fused_vmem(self.cfg.block_size, a.shape[1]):
-            return None   # resident (d,d) output past VMEM: unfused tiles d
         return kops.sketch_gram_srht(state["rows"], state["sigma"], a,
                                      survivors)
 

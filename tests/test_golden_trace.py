@@ -1,0 +1,133 @@
+"""Golden-trace regression: a committed JSONL fleet trace must replay to
+bit-identical totals, forever.
+
+``tests/fixtures/fleet_trace_golden.jsonl`` was recorded by this module's
+``--regen`` entry point: a fixed five-row schedule (wait_all, an
+OVERLAPPED k_of_n launched at t=0 — its row carries the ``advance`` field
+— a hedged phase, a master charge, and a speculative phase) under a fleet
+with failures and cold starts, with per-worker times attached.  The tests
+pin three contracts the runtime refactors must not break:
+
+1. Replaying the fixture through the same schedule reproduces, bit for
+   bit, the totals implied by the raw rows (clock += advance-or-elapsed
+   in row order; dollars from the summed ledger columns) — including the
+   overlap accounting, which moves the clock by less than ``elapsed``.
+2. Re-recording the schedule live matches the committed rows exactly
+   (same jax version; across versions the schedule structure must still
+   match), and a live record -> replay round trip is bit-identical.
+3. ``calibrate_from_trace`` still accepts the fixture's worker_times.
+
+Regenerate (only after an INTENTIONAL engine/trace-format change):
+
+    PYTHONPATH=src python tests/test_golden_trace.py --regen
+"""
+import json
+import pathlib
+
+import jax
+import pytest
+
+from repro.core.straggler import SimClock, StragglerModel
+from repro.runtime import (CostLedger, CostModel, FleetConfig, TraceRecorder,
+                           TraceReplayer, calibrate_from_trace)
+
+FIXTURE = pathlib.Path(__file__).parent / "fixtures" / \
+    "fleet_trace_golden.jsonl"
+_FLEET = FleetConfig(failure_rate=0.15, cold_start_prob=0.25)
+
+
+def _drive(clock):
+    """The golden schedule.  Phase 2 launches at t=0 (fully or partially
+    hidden behind phase 1), so its recorded row carries ``advance``."""
+    clock.phase(jax.random.PRNGKey(0), 12, policy="wait_all",
+                flops_per_worker=3e5, comm_units=1.0)
+    clock.phase(jax.random.PRNGKey(1), 12, policy="k_of_n", k=10,
+                flops_per_worker=3e5, not_before=0.0)
+    clock.phase(jax.random.PRNGKey(2), 8, policy="hedged",
+                flops_per_worker=1e5)
+    clock.charge(0.125)
+    clock.phase(jax.random.PRNGKey(3), 6, policy="speculative",
+                flops_per_worker=2e5)
+    return clock
+
+
+def _load():
+    rows = [json.loads(line) for line in FIXTURE.read_text().splitlines()
+            if line.strip()]
+    meta = rows[0]
+    assert meta["kind"] == "meta"
+    return meta, rows[1:]
+
+
+def test_golden_fixture_replays_bit_identical():
+    meta, rows = _load()
+    assert any("advance" in r for r in rows), \
+        "fixture must contain an overlapped phase"
+    replayed = _drive(SimClock(StragglerModel(),
+                               replay=TraceReplayer(rows)))
+    # Independent arithmetic on the raw rows, in row order (same float
+    # accumulation order as the engine — equality is exact, not approx).
+    seconds = 0.0
+    ledger = CostLedger()
+    for r in rows:
+        if r["kind"] == "phase":
+            seconds += r.get("advance", r["elapsed"])
+            ledger.add(CostLedger(gb_seconds=r["gb_seconds"],
+                                  invocations=r["invocations"],
+                                  s3_puts=r["s3_puts"],
+                                  s3_gets=r["s3_gets"]))
+        else:
+            seconds += r["elapsed"]
+    assert replayed.time == seconds
+    assert replayed.dollars == ledger.dollars(CostModel())
+
+
+def test_golden_schedule_rerecord_matches_fixture(tmp_path):
+    meta, rows = _load()
+    rec = TraceRecorder(worker_times=True)
+    live = _drive(SimClock(StragglerModel(), fleet=_FLEET, recorder=rec))
+    # Live record -> replay round trip is bit-identical in any version.
+    path = tmp_path / "rerecord.jsonl"
+    rec.dump(path)
+    from repro.runtime import load_trace
+    replayed = _drive(SimClock(StragglerModel(), replay=load_trace(path)))
+    assert replayed.time == live.time
+    assert replayed.dollars == live.dollars
+    # Schedule structure must always match the committed fixture...
+    assert [(r["kind"], r.get("policy"), r.get("workers"), r.get("k"))
+            for r in rec.rows] == \
+        [(r["kind"], r.get("policy"), r.get("workers"), r.get("k"))
+         for r in rows]
+    # ...and under the fixture's jax version the rows must be IDENTICAL
+    # (json round-trip normalizes float repr, mask hex, advance fields).
+    if jax.__version__ != meta["jax_version"]:
+        pytest.skip(f"fixture recorded under jax {meta['jax_version']}, "
+                    f"running {jax.__version__}: structural check only")
+    assert [json.loads(json.dumps(r)) for r in rec.rows] == rows
+
+
+def test_golden_fixture_calibrates():
+    model = calibrate_from_trace(FIXTURE)
+    assert model.base_time > 0
+    assert 0.0 <= model.p_tail <= 1.0
+
+
+def _regen():
+    rec = TraceRecorder(worker_times=True)
+    _drive(SimClock(StragglerModel(), fleet=_FLEET, recorder=rec))
+    FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+    with open(FIXTURE, "w") as f:
+        f.write(json.dumps({"kind": "meta", "jax_version": jax.__version__,
+                            "generator": "tests/test_golden_trace.py "
+                                         "--regen"}) + "\n")
+        for row in rec.rows:
+            f.write(json.dumps(row) + "\n")
+    print(f"wrote {FIXTURE} ({len(rec.rows)} rows)")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        sys.exit("usage: python tests/test_golden_trace.py --regen")

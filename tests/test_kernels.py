@@ -189,6 +189,101 @@ def test_sketch_gram_dtypes(dtype):
         rtol=1e-4, atol=1e-4)
 
 
+# ------------------------------- fused-vs-unfused differential sweep (tiled)
+# d = 64 fits one resident output tile; 1536 and 4096 are past the old
+# single-tile VMEM budget, where pre-tiling code silently fell back to the
+# unfused pair — the path/pick assertions pin that the d-tiled fused grid
+# actually runs there now.
+_SWEEP_N = {64: 300, 1536: 192, 4096: 128}
+
+
+@pytest.mark.parametrize("d", [64, 1536, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("family", ["oversketch", "srht", "sjlt"])
+def test_fused_differential_sweep(family, dtype, d):
+    from repro import sketching
+    from repro.core.sketch import OverSketchConfig, sketched_gram
+
+    b = 64
+    n = _SWEEP_N[d]
+    fam = sketching.get(family, OverSketchConfig(128, b, 0.25))
+    d_pad = d + ((-d) % 128)
+    nnz = getattr(fam, "nnz_per_row", 1)
+    expect_path = "fused" if d <= 1024 else "fused_tiled"
+    assert fam.fused_path(d) == expect_path
+    assert ops.fused_path(b, d, nnz=nnz) == expect_path
+    if expect_path == "fused_tiled":
+        assert ops.pick_d_tile(b, d, nnz=nnz) < d_pad
+
+    key = jax.random.PRNGKey(d + 13 * (dtype == jnp.bfloat16))
+    state = fam.sample(key, n)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    a = (a / jnp.sqrt(jnp.asarray(n, jnp.float32))).astype(dtype)
+    surv = jnp.ones((fam.cfg.total_blocks,), bool).at[0].set(False)
+    fused = fam.gram_fused(state, a, surv)
+    assert fused is not None           # the decline path is gone for any d
+    # The kernel casts to f32 up front; the unfused oracle runs on the
+    # exactly-cast values so <= 1e-4 is an absolute f32 agreement bound.
+    a32 = a.astype(jnp.float32)
+    expect = sketched_gram(fam.apply(state, a32), surv)
+    assert fused.shape == (d, d)
+    assert float(jnp.abs(fused - expect).max()) <= 1e-4
+
+
+def test_fused_runs_to_d8192():
+    """Acceptance bound: power-of-two-padded d up to 8192 takes the tiled
+    fused grid (never None, never the unfused pair) and agrees."""
+    k, n, d, b = 1, 64, 8192, 64
+    h, sigma, a, _, _ = _sketch_inputs(3, k, n, d, b)
+    surv = jnp.ones((k,), bool)
+    assert ops.fused_path(b, d) == "fused_tiled"
+    out = ops.sketch_gram_count(h, sigma, a, b, surv)
+    expect = ref.sketch_gram_count(h, sigma, a, b, surv)
+    assert float(jnp.abs(out - expect).max()) <= 1e-4
+
+
+def test_sketch_gram_forced_tiny_tile_matches():
+    """Forcing d_tile below d exercises the multi-tile grid on shapes the
+    default pick would run single-tile — diag/off-diag fold coverage."""
+    k, n, d, b = 3, 520, 200, 64
+    h, sigma, a, rows, surv = _sketch_inputs(4, k, n, d, b)
+    out = ops.sketch_gram_count(h, sigma, a, b, surv, d_tile=128)
+    assert float(jnp.abs(out - ref.sketch_gram_count(h, sigma, a, b,
+                                                     surv)).max()) <= 1e-4
+    out_s = ops.sketch_gram_srht(rows, sigma, a, surv, d_tile=128)
+    assert float(jnp.abs(out_s - ref.sketch_gram_srht(rows, sigma, a,
+                                                      surv)).max()) <= 1e-4
+
+
+# --------------------------------------------------- fused sjlt entry point
+@pytest.mark.parametrize("k,s,n,d,b", [
+    (2, 1, 128, 32, 64),    # s=1 degenerates to count-sketch
+    (3, 4, 700, 37, 64),    # non-power-of-two n, ragged d
+    (2, 8, 300, 130, 128),  # deep slot axis, d crossing a lane tile
+])
+def test_sketch_gram_sjlt_fused_matches_unfused(k, s, n, d, b):
+    key = jax.random.PRNGKey(k * 3 + s + n)
+    kh, ks, ka, km = jax.random.split(key, 4)
+    h = jax.random.randint(kh, (k, s, n), 0, b, dtype=jnp.int32)
+    sigma = jax.random.rademacher(ks, (k, s, n), dtype=jnp.float32)
+    a = jax.random.normal(ka, (n, d)) / jnp.sqrt(jnp.asarray(n, jnp.float32))
+    surv = jax.random.bernoulli(km, 0.6, (k,)).at[0].set(True)
+    out = ops.sketch_gram_sjlt(h, sigma, a, b, surv)
+    expect = ref.sketch_gram_sjlt(h, sigma, a, b, surv)
+    assert out.shape == (d, d)
+    assert float(jnp.abs(out - expect).max()) <= 1e-4
+
+
+def test_sjlt_s1_equals_count_sketch():
+    """SJLT with one slot IS count-sketch: both fused entry points agree."""
+    k, n, d, b = 2, 256, 40, 64
+    h, sigma, a, _, surv = _sketch_inputs(5, k, n, d, b)
+    out_c = ops.sketch_gram_count(h, sigma, a, b, surv)
+    out_j = ops.sketch_gram_sjlt(h[:, None, :], sigma[:, None, :], a, b, surv)
+    np.testing.assert_allclose(np.asarray(out_j), np.asarray(out_c),
+                               rtol=1e-5, atol=1e-6)
+
+
 # ------------------------------------------------------------ two-pass fwht
 @pytest.mark.parametrize("k,n,d", [
     (2, 64, 20),       # tiny d (pads to one 128 lane tile)

@@ -98,7 +98,7 @@ def test_kernel_path_matches_reference(name):
                                rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("name", ("oversketch", "srht"))
+@pytest.mark.parametrize("name", ("oversketch", "srht", "sjlt"))
 def test_gram_fused_matches_gram(name):
     """Families with a fused streaming kernel: gram(use_kernels=True)
     (which prefers gram_fused) == the plain apply+gram path, under a
@@ -119,28 +119,33 @@ def test_gram_fused_matches_gram(name):
         np.asarray(fused), rtol=1e-6, atol=1e-6)
 
 
-@pytest.mark.parametrize("name", ("oversketch", "srht"))
-def test_gram_fused_declines_past_vmem_budget(name):
-    """Beyond the documented fused-kernel VMEM budget (the resident (d,d)
-    output) gram_fused returns None so the kernel path tiles d via the
-    unfused pair instead of failing to compile on hardware."""
-    from repro.kernels.sketch_gram import fits_fused_vmem
+@pytest.mark.parametrize("name", ("oversketch", "srht", "sjlt"))
+def test_gram_fused_tiles_past_single_tile_budget(name):
+    """Beyond the single-tile VMEM budget (the resident (d,d) output) the
+    fused kernel d-tiles its output grid instead of declining: gram_fused
+    never returns None and still matches the reference path.  (The old
+    behavior — None past MAX_FUSED_VMEM_BYTES, silent unfused fallback —
+    is exactly what the tiled grid deleted.)"""
+    from repro.kernels.sketch_gram import fits_fused_vmem, pick_d_tile
     key = jax.random.PRNGKey(9)
     n, d = 64, 2048
     fam = sketching.get(name, _cfg(128, 64, 0.25))
     assert not fits_fused_vmem(fam.cfg.block_size, d)
     assert fits_fused_vmem(fam.cfg.block_size, 512)
+    assert fam.fused_path(d) == "fused_tiled"
+    assert pick_d_tile(fam.cfg.block_size, d) < d
     a = jax.random.normal(key, (n, d)) / np.sqrt(n)
     state = fam.sample(jax.random.fold_in(key, 1), n)
     surv = jnp.ones((fam.cfg.total_blocks,), bool)
-    assert fam.gram_fused(state, a, surv) is None
+    fused = fam.gram_fused(state, a, surv)
+    assert fused is not None
     np.testing.assert_allclose(
-        np.asarray(fam.gram(state, a, surv, use_kernels=True)),
+        np.asarray(fused),
         np.asarray(fam.gram(state, a, surv, use_kernels=False)),
         rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("name", ("sjlt", "gaussian", "nystrom", "leverage"))
+@pytest.mark.parametrize("name", ("gaussian", "nystrom", "leverage"))
 def test_gram_kernel_fallback_without_fused(name):
     """Families without a fused kernel return None from gram_fused and the
     kernel path falls back to apply + masked-Gram kernel."""
