@@ -24,6 +24,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 # module -> repo-root JSON file persisting its rows as a perf baseline
 PERSIST_JSON = {
     "kernels_bench": "BENCH_kernels.json",
+    "scheduler_bench": "BENCH_fleet.json",
 }
 
 MODULES = [
@@ -38,6 +39,7 @@ MODULES = [
     "fleet_bench",
     "kernels_bench",
     "roofline",
+    "scheduler_bench",
 ]
 
 

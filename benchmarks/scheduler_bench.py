@@ -1,0 +1,172 @@
+"""Phase-DAG scheduler sweep: DAG-vs-sequential makespan x warm-pool TTL x
+per-phase Lambda sizing.
+
+Three questions, one grid (written to ``BENCH_fleet.json`` — the fleet-side
+perf trajectory next to the kernel one):
+
+  1. How much makespan does DAG dispatch buy?  A Newton-iteration-shaped
+     DAG (gradient matvec chain || Hessian-sketch fan-out -> line search)
+     under nonzero straggler tails: the DAG makespan must be strictly
+     below sequential, and a fully serialized chain must equal it
+     bit-for-bit.  A real ``oversketched_newton`` run (schedule="dag" vs
+     "sequential") repeats the comparison end-to-end.
+  2. What do bursty schedules pay in cold starts?  The same DAG under a
+     ``WarmPool`` across TTLs: the DAG's concurrent fan-outs need more
+     containers at once than the steady sequential schedule, so its cold
+     count is never lower.
+  3. What does per-phase sizing save?  The same workload billed at the
+     paper's fleet-wide 3 GB vs each phase's declared ``memory_gb``.
+
+One extra row self-checks that a DAG-scheduled, pool-enabled, per-phase-
+sized trace replays to bit-identical ``(seconds, dollars)``.
+
+Every row carries a ``path`` field (``dag`` | ``seq`` | ``pool`` |
+``replay``) naming which dispatch mode produced it, mirroring the kernel
+baseline's attribution convention.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import json_row
+from repro.core.straggler import SimClock, StragglerModel
+from repro.runtime import TraceRecorder, load_trace
+from repro.scheduler import PhaseSpec, WarmPool, lambda_memory_gb, run_dag
+
+MODEL = StragglerModel(p_tail=0.05, tail_hi=3.0)
+
+
+def _newton_shaped_specs(workers: int, sized: bool):
+    """One Newton-iteration-shaped DAG: a two-matvec gradient chain in
+    parallel with a Hessian-sketch fan-out, joined by a line search."""
+    mem = (lambda: lambda_memory_gb(256 * 64 * 4)) if sized else (lambda: None)
+    return [
+        PhaseSpec("grad/0:X", workers, policy="k_of_n",
+                  k=max(1, int(0.8 * workers)), flops_per_worker=3e5,
+                  comm_units=1.0, memory_gb=mem()),
+        PhaseSpec("grad/1:XT", workers, policy="k_of_n",
+                  k=max(1, int(0.8 * workers)), flops_per_worker=3e5,
+                  comm_units=1.0, deps=("grad/0:X",), memory_gb=mem()),
+        PhaseSpec("hessian", 2 * workers, policy="k_of_n",
+                  k=max(1, int(0.8 * 2 * workers)), flops_per_worker=6e5,
+                  comm_units=1.0,
+                  memory_gb=lambda_memory_gb(256 * 256 * 8) if sized
+                  else None),
+        PhaseSpec("linesearch", workers, policy="wait_all",
+                  flops_per_worker=1e5, comm_units=0.5,
+                  deps=("grad/1:XT", "hessian"), memory_gb=mem()),
+    ]
+
+
+def _chain_specs(workers: int):
+    names = ["a", "b", "c", "d"]
+    return [PhaseSpec(n, workers, policy="wait_all", flops_per_worker=2e5,
+                      deps=(names[i - 1],) if i else ())
+            for i, n in enumerate(names)]
+
+
+def _run(specs, *, sequential=False, pool=None, recorder=None, replay=None
+         ) -> SimClock:
+    clock = SimClock(MODEL, pool=pool, recorder=recorder, replay=replay)
+    run_dag(clock, jax.random.PRNGKey(7), specs, sequential=sequential)
+    return clock
+
+
+def _newton_end_to_end(schedule: str, iters: int):
+    import dataclasses
+
+    from repro.core import newton, sketch
+    from repro.core.objectives import Dataset, LogisticRegression
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1024, 16))
+    y = jnp.sign(x @ jax.random.normal(jax.random.PRNGKey(1), (16,)))
+    cfg = newton.NewtonConfig(
+        iters=iters, schedule=schedule,
+        sketch=sketch.OverSketchConfig(sketch_dim=256, block_size=64,
+                                       straggler_tolerance=0.25))
+    res = newton.oversketched_newton(
+        LogisticRegression(), Dataset(x=x, y=y), jnp.zeros(16), cfg,
+        model=MODEL)
+    return res.history["time"][-1], res.history["cost"][-1]
+
+
+def run(quick: bool = True):
+    rows = []
+    sizes = (16, 64) if quick else (16, 64, 256)
+
+    # --- 1. DAG vs sequential makespan --------------------------------
+    for w in sizes:
+        specs = _newton_shaped_specs(w, sized=False)
+        dag = _run(specs)
+        seq = _run(specs, sequential=True)
+        rows.append(json_row(
+            f"sched_dag_vs_seq_w{w}", dag.time * 1e6, sim_s=dag.time,
+            seq_s=seq.time, speedup=seq.time / dag.time, usd=dag.dollars)
+            | {"path": "dag"})
+        assert dag.time < seq.time, "DAG makespan must beat sequential"
+        assert dag.dollars == seq.dollars, "billing is schedule-invariant"
+        chain = _chain_specs(w)
+        cd, cs = _run(chain), _run(chain, sequential=True)
+        rows.append(json_row(
+            f"sched_chain_eq_w{w}", cd.time * 1e6, sim_s=cd.time,
+            exact=int(cd.time == cs.time and cd.dollars == cs.dollars))
+            | {"path": "seq"})
+
+    # --- 2. warm-pool TTL sweep ---------------------------------------
+    # Phase durations here are O(0.3 s) with straggler tails to ~1 s, so
+    # ttl=0.05 expires containers released early behind a straggling
+    # phase, 1.0 keeps intra-schedule reuse, 300 never expires.
+    for ttl in (0.05, 1.0, 300.0):
+        for label, sequential in (("dag", False), ("seq", True)):
+            pool = WarmPool(ttl=ttl)
+            clock = _run(_newton_shaped_specs(64, sized=False),
+                         sequential=sequential, pool=pool)
+            rows.append(json_row(
+                f"sched_pool_ttl{ttl:g}_{label}", clock.time * 1e6,
+                sim_s=clock.time, usd=clock.dollars, warm=pool.warm_hits,
+                cold=pool.cold_starts) | {"path": "pool"})
+
+    # --- 3. per-phase Lambda sizing -----------------------------------
+    fixed = _run(_newton_shaped_specs(64, sized=False))
+    sized = _run(_newton_shaped_specs(64, sized=True))
+    rows.append(json_row(
+        "sched_mem_fixed3gb", fixed.time * 1e6, usd=fixed.dollars,
+        gb_s=fixed.ledger.gb_seconds) | {"path": "dag"})
+    rows.append(json_row(
+        "sched_mem_sized", sized.time * 1e6, usd=sized.dollars,
+        gb_s=sized.ledger.gb_seconds,
+        saving=1.0 - sized.dollars / fixed.dollars) | {"path": "dag"})
+
+    # --- 4. Newton end-to-end, DAG vs sequential dispatch -------------
+    iters = 3 if quick else 8
+    t_dag, c_dag = _newton_end_to_end("dag", iters)
+    t_seq, c_seq = _newton_end_to_end("sequential", iters)
+    rows.append(json_row(
+        "sched_newton_dag_vs_seq", t_dag * 1e6, sim_s=t_dag, seq_s=t_seq,
+        speedup=t_seq / t_dag, usd=c_dag,
+        cost_equal=int(c_dag == c_seq)) | {"path": "dag"})
+
+    # --- 5. DAG + pool + sizing trace replay self-check ---------------
+    rec = TraceRecorder(lifecycle=True)
+    recorded = _run(_newton_shaped_specs(32, sized=True),
+                    pool=WarmPool(ttl=30.0), recorder=rec)
+    with tempfile.NamedTemporaryFile("w", suffix=".jsonl",
+                                     delete=False) as tmp:
+        path = tmp.name
+    try:
+        rec.dump(path)
+        replayed = _run(_newton_shaped_specs(32, sized=True),
+                        replay=load_trace(path))
+        exact = int(replayed.time == recorded.time
+                    and replayed.dollars == recorded.dollars)
+    finally:
+        os.unlink(path)
+    rows.append(json_row("sched_trace_replay", recorded.time * 1e6,
+                         sim_s=recorded.time, usd=recorded.dollars,
+                         replay_exact=exact) | {"path": "replay"})
+    return rows

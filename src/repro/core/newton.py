@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core import coded, linesearch, sketch, solvers, straggler
 from repro.core.objectives import Dataset
-from repro import sketching
+from repro import scheduler, sketching
 
 
 def _decodable(erased_grid: "np.ndarray") -> bool:
@@ -91,6 +91,18 @@ class NewtonConfig:
     # Master-side pipeline overlap (Sec. 4.1): the one-time product-code
     # encodes launch together and hide behind earlier compute phases.
     overlap_encode: bool = True
+    # Phase dispatch: "dag" emits each iteration as a phase DAG through
+    # repro.scheduler — the Hessian-sketch fan-out launches concurrently
+    # with the gradient round (they are independent within an iteration;
+    # Sec. 4.1 / Bartan-Pilanci's concurrent sketch dispatch) — while
+    # "sequential" keeps the historical one-phase-at-a-time clock.  The
+    # iterates are identical either way (same phase keys => same masks);
+    # only the simulated timeline differs.
+    schedule: str = "dag"
+    # Per-phase Lambda sizing: declare each phase's working set so it bills
+    # at its own memory_gb (scheduler.sizing) instead of the paper's
+    # fleet-wide 3 GB.  Off by default to keep historical dollar totals.
+    phase_memory: bool = False
     seed: int = 0
     use_kernels: bool = False       # route sketch through repro.kernels ops
     track_test_error: bool = False
@@ -100,12 +112,24 @@ class NewtonConfig:
     adaptive_sketch: bool = False
     adaptive_stall_ratio: float = 0.25   # f-decrease ratio that counts as a stall
     adaptive_max_growth: int = 4         # cap: sketch_dim <= 4x initial
+    # What drives adaptive growth: "stall" = the f-decrease heuristic above;
+    # "mp" = the measured Marchenko-Pastur debias factor 1 - d/m_eff of the
+    # SURVIVING sketch rows — grow whenever it falls below
+    # adaptive_mp_target, i.e. the sketch is too biased to trust, whether
+    # or not f has stalled yet (ROADMAP: the MP factor says *when*).
+    adaptive_metric: str = "stall"
+    adaptive_mp_target: float = 0.75
 
 
 @dataclasses.dataclass
 class NewtonResult:
     w: jax.Array
     history: Dict[str, List[float]]
+
+
+def _phase_mem(enabled: bool, working_set_bytes: float) -> Optional[float]:
+    """Declared Lambda size for a phase, or None for the fleet-wide 3 GB."""
+    return scheduler.lambda_memory_gb(working_set_bytes) if enabled else None
 
 
 class CodedMatvecEngine:
@@ -122,9 +146,10 @@ class CodedMatvecEngine:
 
     def __init__(self, data: Dataset, block_rows: int,
                  model: Optional[straggler.StragglerModel],
-                 overlap_encode: bool = True):
+                 overlap_encode: bool = True, phase_memory: bool = False):
         self.model = model
         self.overlap_encode = overlap_encode
+        self.phase_memory = phase_memory
         self._encode_pending = {"X", "XT"}
         self._encode_t0: Optional[float] = None
         n, d = data.x.shape
@@ -149,11 +174,42 @@ class CodedMatvecEngine:
         return self.code_x if tag == "X" else self.code_xt
 
     def matvec(self, tag: str, v: jax.Array, clock: straggler.SimClock,
-               key: jax.Array, policy: str) -> jax.Array:
+               key: jax.Array, policy: str,
+               dag: Optional[scheduler.DagRun] = None,
+               name: Optional[str] = None,
+               after: Tuple[str, ...] = ()) -> jax.Array:
+        """One straggler-resilient coded matvec.
+
+        With ``dag`` the compute phase (and, on decode failure, the retry
+        phase) is dispatched as a named DAG node with deps ``after`` —
+        the matvec chain inside one gradient stays serialized through
+        those edges while independent phases (the Hessian sketch) overlap
+        it.  The one-time encode phases keep their own clock-level
+        ``not_before`` overlap machinery either way."""
         code = self.code_for(tag)
         w = code.num_workers
         enc = self.enc_x if tag == "X" else self.enc_xt
         flops = 2.0 * code.block_rows * enc.shape[-1]   # one block matvec
+        mem = _phase_mem(self.phase_memory, scheduler.matvec_worker_bytes(
+            code.block_rows, enc.shape[-1]))
+        enc_floor = {"t": None}   # set if this call bills an encode phase
+
+        def phase(k, policy, *, kk=None, decodable=None, comm_units=1.0):
+            if dag is not None:
+                # The compute phase consumes this operand's encode: when
+                # the encode was billed in this call (on the direct clock,
+                # outside the DAG), floor the launch at its finish so the
+                # matvec cannot be simulated before its input exists.
+                res = dag.dispatch(scheduler.PhaseSpec(
+                    name=name or tag, workers=w, policy=policy,
+                    k=kk, flops_per_worker=flops, comm_units=comm_units,
+                    memory_gb=mem, decodable=decodable, deps=after),
+                    key=k, min_start=enc_floor["t"])
+                return res.elapsed, res.mask
+            return clock.phase(k, w, policy=policy, k=kk,
+                               flops_per_worker=flops,
+                               comm_units=comm_units, decodable=decodable,
+                               memory_gb=mem)
         if self.model is not None and tag in self._encode_pending:
             # One-time product-code encode of this operand, billed on
             # first use.  Both encodes launch when the engine comes up
@@ -172,7 +228,10 @@ class CodedMatvecEngine:
                 nb = None
             clock.phase(jax.random.fold_in(key, 555), w, policy="wait_all",
                         flops_per_worker=enc_flops, comm_units=1.0,
-                        not_before=nb)
+                        not_before=nb, memory_gb=mem)
+            # After this call the clock sits at (at least) the encode's
+            # finish — the earliest instant this operand can be consumed.
+            enc_floor["t"] = clock.time
         erased = None
         if self.model is not None and policy == "coded":
             # Faithful master: results stream in; decode starts as soon as
@@ -181,24 +240,18 @@ class CodedMatvecEngine:
             # policy with the peeling-feasibility predicate.
             g1 = code.grid + 1
             k_min = max(1, w - (2 * code.grid + 1))
-            _, mask = clock.phase(
-                key, w, policy="coded_decode", k=k_min,
-                flops_per_worker=flops, comm_units=1.0,
-                decodable=lambda m: _decodable(~m.reshape(g1, g1)))
+            _, mask = phase(key, "coded_decode", kk=k_min,
+                            decodable=lambda m: _decodable(~m.reshape(g1, g1)))
             erased = jnp.asarray(~np.asarray(mask)).reshape(g1, g1)
         elif self.model is not None and policy == "wait_all":
-            clock.phase(key, w, policy="wait_all", flops_per_worker=flops,
-                        comm_units=1.0)
+            phase(key, "wait_all")
         elif self.model is not None and policy == "speculative":
-            clock.phase(key, w, policy="speculative",
-                        flops_per_worker=flops, comm_units=1.0)
+            phase(key, "speculative")
         elif self.model is not None and policy == "ignore":
             # mini-batch style: drop stragglers' contributions entirely —
             # handled by the caller using an uncoded gradient; we still pay
             # the k-of-n time.
-            k = max(1, int(0.95 * w))
-            clock.phase(key, w, policy="k_of_n", k=k,
-                        flops_per_worker=flops, comm_units=1.0)
+            phase(key, "k_of_n", kk=max(1, int(0.95 * w)))
         y, ok = self._mv(tag, v, erased)
         if erased is not None and not bool(ok):
             # Decode failure (erasure pattern beyond the code): the paper's
@@ -206,8 +259,15 @@ class CodedMatvecEngine:
             self.fallbacks += 1
             y, _ = self._mv(tag, v, None)
             if self.model is not None:
-                clock.phase(jax.random.fold_in(key, 1), w,
-                            policy="wait_all", comm_units=1.0)
+                kf = jax.random.fold_in(key, 1)
+                if dag is not None:
+                    dag.dispatch(scheduler.PhaseSpec(
+                        name=(name or tag) + "/retry", workers=w,
+                        policy="wait_all", comm_units=1.0, memory_gb=mem,
+                        deps=((name or tag),)), key=kf)
+                else:
+                    clock.phase(kf, w, policy="wait_all", comm_units=1.0,
+                                memory_gb=mem)
         return y
 
 
@@ -304,7 +364,9 @@ def _hess_rows(objective, data: Dataset, w: jax.Array) -> Tuple[int, int]:
 
 
 def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
-                   key: jax.Array, clock: Optional[straggler.SimClock]
+                   key: jax.Array, clock: Optional[straggler.SimClock],
+                   dag: Optional[scheduler.DagRun] = None,
+                   tag: str = "hessian"
                    ) -> Tuple[jax.Array, Optional[float]]:
     """Returns (H_hat, m_eff): the (approximate or exact) Hessian including
     the hess_reg * I term, and the surviving sketch-row count m_eff that the
@@ -314,10 +376,28 @@ def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
     (N+e)*(d/b)^2 workers (Alg. 2 step 3) vs ceil(n/b)*(d/b)^2 for the exact
     product — same per-worker block work, vastly different worker counts and
     master I/O when n >> m.  Per-worker flops and I/O come from the family's
-    cost hooks, so e.g. dense Gaussian pays its O(n*b*d) apply honestly."""
+    cost hooks, so e.g. dense Gaussian pays its O(n*b*d) apply honestly.
+
+    With ``dag`` the phase is dispatched as a dependency-free DAG node — it
+    launches at the iteration start, concurrent with the gradient round
+    (the sketch S^T A depends on w only, not on g).  The phase key is the
+    same either way, so the survivor mask (hence the iterate) is identical
+    under both schedules."""
     n_rows, d = _hess_rows(objective, data, w)
     b = max(cfg.sketch.block_size, 1)
     d_blocks = max(1, -(-d // b))
+
+    def run(workers, policy, k=None, flops=0.0, comm=0.0, mem=None):
+        if dag is not None:
+            return dag.dispatch(scheduler.PhaseSpec(
+                name=tag, workers=workers, policy=policy, k=k,
+                flops_per_worker=flops, comm_units=comm,
+                memory_gb=mem), key=key).mask
+        _, mask = clock.phase(key, workers, policy=policy, k=k,
+                              flops_per_worker=flops, comm_units=comm,
+                              memory_gb=mem)
+        return mask
+
     if cfg.hessian_policy == "oversketch":
         scfg = cfg.sketch
         fam = sketching.get(cfg.sketch_family, scfg)
@@ -328,11 +408,11 @@ def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
             # tile groups run in parallel (phase time ~ one k-of-n round);
             # the master I/O scales with the full worker count.
             total_workers = scfg.total_blocks * d_blocks * d_blocks
-            _, mask = clock.phase(key, scfg.total_blocks, policy="k_of_n",
-                                  k=scfg.num_blocks,
-                                  flops_per_worker=fam.block_flops(n_rows, d),
-                                  comm_units=fam.comm_units(d) * total_workers)
-            survivors = mask
+            mem = _phase_mem(cfg.phase_memory, scheduler.sketch_worker_bytes(
+                scfg.block_size, min(d, b)))
+            survivors = run(scfg.total_blocks, "k_of_n", k=scfg.num_blocks,
+                            flops=fam.block_flops(n_rows, d),
+                            comm=fam.comm_units(d) * total_workers, mem=mem)
         state = fam.sample(jax.random.fold_in(key, 7), n_rows)
         fn = _jitted_sketched_hessian(objective, fam, cfg.use_kernels)
         h_hat = fn(w, data, state, survivors)
@@ -344,20 +424,36 @@ def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
         workers = max(1, -(-n_rows // b)) * d_blocks * d_blocks
         policy = ("speculative" if cfg.hessian_policy == "exact_speculative"
                   else "wait_all")
-        clock.phase(key, workers, policy=policy,
-                    flops_per_worker=block_flops,
-                    comm_units=0.05 * workers)
+        mem = _phase_mem(cfg.phase_memory,
+                         scheduler.sketch_worker_bytes(b, min(d, b)))
+        run(workers, policy, flops=block_flops, comm=0.05 * workers, mem=mem)
     return _jitted_exact_hessian(objective)(w, data), None
 
 
 def _distavg_direction_phase(objective, data: Dataset, w: jax.Array,
                              g: jax.Array, cfg: NewtonConfig, key: jax.Array,
-                             clock: Optional[straggler.SimClock]
+                             clock: Optional[straggler.SimClock],
+                             dag: Optional[scheduler.DagRun] = None,
+                             grad_dep: Optional[str] = None,
+                             tag: str = "distavg"
                              ) -> Tuple[jax.Array, jax.Array]:
     """sketch_mode="distributed-avg": one worker per sketch block, each
     paying its apply + d x d Gram + local Cholesky solve; the master only
     ships d-vectors back (comm ~ d per worker, not a d x d Gram tile).
-    Returns (direction, averaged H_k g for the weakly-convex search)."""
+    Returns (direction, averaged H_k g for the weakly-convex search).
+
+    With ``dag`` the round splits at its true data dependency, the way
+    Bartan-Pilanci's analysis assumes it is dispatched: the SKETCH phase
+    (apply + per-block Gram, a function of w only) launches concurrently
+    with the gradient round, and the SOLVE phase (needs g shipped to the
+    survivors) runs after both.  The survivor mask comes from the sketch
+    phase under the same key as the sequential combined phase; under the
+    default all-off fleet lifecycle the duration ORDER is scale-invariant
+    in the per-worker flop count, so the mask — hence the direction — is
+    schedule-invariant.  With cold starts or failures enabled the split
+    phase's smaller flop count can reorder arrivals (additive delays vs
+    multiplicative work), so masks may differ between schedules there —
+    honest modelling of the split round, not a bug."""
     n_rows, d = _hess_rows(objective, data, w)
     scfg = cfg.sketch
     fam = sketching.get(cfg.sketch_family, scfg)
@@ -367,15 +463,34 @@ def _distavg_direction_phase(objective, data: Dataset, w: jax.Array,
         # reports apply_flops=0 (oversketch) still pays one streaming pass
         # over A on each worker.
         apply_flops = fam.apply_flops(n_rows, d) or 2.0 * n_rows * d
+        gram_flops = 2.0 * scfg.block_size * d * d
         solve_flops = (d ** 3 / 3.0 if cfg.distavg_solver == "chol"
                        else 2.0 * cfg.cg_iters * d * d)   # cg matvecs
-        worker_flops = (apply_flops
-                        + 2.0 * scfg.block_size * d * d + solve_flops)
-        _, mask = clock.phase(key, scfg.total_blocks, policy="k_of_n",
-                              k=scfg.num_blocks,
-                              flops_per_worker=worker_flops,
-                              comm_units=0.01 * scfg.total_blocks)
-        survivors = mask
+        mem = _phase_mem(cfg.phase_memory,
+                         scheduler.distavg_worker_bytes(scfg.block_size, d))
+        if dag is not None:
+            sk = dag.dispatch(scheduler.PhaseSpec(
+                name=f"{tag}-sketch", workers=scfg.total_blocks,
+                policy="k_of_n", k=scfg.num_blocks,
+                flops_per_worker=apply_flops + gram_flops,
+                comm_units=0.01 * scfg.total_blocks, memory_gb=mem),
+                key=key)
+            survivors = sk.mask
+            deps = (f"{tag}-sketch",) + \
+                ((grad_dep,) if grad_dep is not None else ())
+            dag.dispatch(scheduler.PhaseSpec(
+                name=f"{tag}-solve", workers=scfg.num_blocks,
+                policy="wait_all", flops_per_worker=solve_flops,
+                comm_units=0.01 * scfg.num_blocks, memory_gb=mem,
+                deps=deps), key=jax.random.fold_in(key, 11))
+        else:
+            _, mask = clock.phase(key, scfg.total_blocks, policy="k_of_n",
+                                  k=scfg.num_blocks,
+                                  flops_per_worker=(apply_flops + gram_flops
+                                                    + solve_flops),
+                                  comm_units=0.01 * scfg.total_blocks,
+                                  memory_gb=mem)
+            survivors = mask
     state = fam.sample(jax.random.fold_in(key, 7), n_rows)
     fn = _jitted_distavg_direction(objective, fam, cfg.debias,
                                    cfg.use_kernels, cfg.distavg_solver,
@@ -399,6 +514,17 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
         raise ValueError(f"unknown sketch_mode {cfg.sketch_mode!r}")
     if cfg.distavg_solver not in ("chol", "cg"):
         raise ValueError(f"unknown distavg_solver {cfg.distavg_solver!r}")
+    if cfg.schedule not in ("dag", "sequential"):
+        raise ValueError(f"unknown schedule {cfg.schedule!r}")
+    if cfg.adaptive_metric not in ("stall", "mp"):
+        raise ValueError(f"unknown adaptive_metric {cfg.adaptive_metric!r}")
+    if (cfg.adaptive_sketch and cfg.adaptive_metric == "mp"
+            and (cfg.sketch_mode != "blocks"
+                 or cfg.hessian_policy != "oversketch")):
+        raise ValueError(
+            "adaptive_metric='mp' needs the surviving sketch-row count, "
+            "which only the sketch_mode='blocks' + "
+            "hessian_policy='oversketch' path reports")
     if cfg.sketch_mode == "distributed-avg":
         if cfg.hessian_policy != "oversketch":
             raise ValueError(
@@ -417,7 +543,8 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
     else:
         clock = straggler.SimClock(model) if model is not None else None
     engine = CodedMatvecEngine(data, cfg.coded_block_rows, model,
-                               overlap_encode=cfg.overlap_encode)
+                               overlap_encode=cfg.overlap_encode,
+                               phase_memory=cfg.phase_memory)
 
     w = jnp.asarray(w0, jnp.float32)
     hist: Dict[str, List[float]] = {k: [] for k in (
@@ -435,27 +562,52 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
     for t in range(cfg.iters):
         cfg = live_cfg
         key, kg, kh, kl = jax.random.split(key, 4)
+        # One iteration = one phase DAG: gradient matvecs chain through
+        # dependency edges, the Hessian sketch is a root node launched at
+        # the iteration start (concurrent with the gradient), the line
+        # search joins both.  schedule="sequential" keeps the historical
+        # one-phase-at-a-time dispatch; the phase keys — hence masks and
+        # iterates — are the same either way.
+        dag = (scheduler.DagRun(clock, key=key)
+               if cfg.schedule == "dag" and clock is not None else None)
 
         # --- 1. gradient (straggler-resilient coded matvecs, Alg. 1) -------
+        grad_tail = None
         if cfg.gradient_policy == "exact" or model is None:
             g = grad_fn(w, data)
         else:
             # Fixed per-tag fold constants: Python's str hash is salted
             # per process, which would break cross-process seed
             # reproducibility of the straggler samples.
-            mv = lambda tag, v: engine.matvec(
-                tag, v, clock,
-                jax.random.fold_in(kg, {"X": 3, "XT": 5}[tag]),
-                cfg.gradient_policy)
+            mv_seq = {"n": 0}
+
+            def mv(tag, v):
+                kf = jax.random.fold_in(kg, {"X": 3, "XT": 5}[tag])
+                if dag is None:
+                    return engine.matvec(tag, v, clock, kf,
+                                         cfg.gradient_policy)
+                after = (dag.last,) if dag.last is not None else ()
+                y = engine.matvec(tag, v, clock, kf, cfg.gradient_policy,
+                                  dag=dag,
+                                  name=f"grad/{mv_seq['n']}:{tag}",
+                                  after=after)
+                mv_seq["n"] += 1
+                return y
+
             g = objective.gradient_via(w, data, mv)
+            if dag is not None:
+                grad_tail = dag.last
 
         # --- 2+3. sketched Hessian (Alg. 2) and direction -------------------
+        m_eff = None
         if cfg.sketch_mode == "distributed-avg":
             # per-worker solves + master-side direction averaging
             p, hg = _distavg_direction_phase(objective, data, w, g, cfg,
-                                             kh, clock)
+                                             kh, clock, dag=dag,
+                                             grad_dep=grad_tail)
         else:
-            h_hat, m_eff = _hessian_phase(objective, data, w, cfg, kh, clock)
+            h_hat, m_eff = _hessian_phase(objective, data, w, cfg, kh,
+                                          clock, dag=dag)
             p = _solve_direction(objective, h_hat, g, cfg)
             if cfg.debias and m_eff is not None:
                 p = sketching.debias_direction(p, p.shape[0], m_eff)
@@ -476,8 +628,20 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
             nb = max(1, data.x.shape[0] // max(cfg.coded_block_rows, 1))
             ls_flops = 2.0 * cfg.coded_block_rows * data.x.shape[1] * \
                 len(cfg.candidates)
-            clock.phase(kl, nb, policy="wait_all",
-                        flops_per_worker=ls_flops, comm_units=0.5)
+            ls_mem = _phase_mem(cfg.phase_memory, scheduler.matvec_worker_bytes(
+                cfg.coded_block_rows, data.x.shape[1]))
+            if dag is not None:
+                # The line search consumes p, i.e. every phase so far; by
+                # then the clock already sits at the DAG's frontier, so it
+                # dispatches on the engine's exact sequential path.
+                dag.dispatch(scheduler.PhaseSpec(
+                    name="linesearch", workers=nb, policy="wait_all",
+                    flops_per_worker=ls_flops, comm_units=0.5,
+                    memory_gb=ls_mem), key=kl, sequential=True)
+            else:
+                clock.phase(kl, nb, policy="wait_all",
+                            flops_per_worker=ls_flops, comm_units=0.5,
+                            memory_gb=ls_mem)
 
         w = w + step * p
 
@@ -491,14 +655,25 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
         hist["sketch_dim"].append(live_cfg.sketch.sketch_dim)
 
         # --- adaptive sketch growth (paper Thm 3.2 remark) ------------------
-        if cfg.adaptive_sketch and prev_f is not None:
-            decrease = prev_f - f_now
-            # Stall = progress fell off vs the last iteration; an INCREASE
-            # in f (decrease < 0, the eps-too-coarse divergence regime) is
-            # always a stall, whatever the previous decrease was.
-            stalled = decrease < 0 or (
-                prev_decrease is not None and prev_decrease > 0
-                and decrease < cfg.adaptive_stall_ratio * prev_decrease)
+        if cfg.adaptive_sketch:
+            if cfg.adaptive_metric == "mp":
+                # Grow when the MEASURED Marchenko-Pastur factor of the
+                # surviving sketch rows says the sketch is too biased to
+                # trust — a leading indicator available from iteration 0,
+                # unlike the trailing f-decrease stall below.
+                stalled = m_eff is not None and sketching.mp_stalled(
+                    int(p.shape[0]), m_eff, cfg.adaptive_mp_target)
+            elif prev_f is not None:
+                decrease = prev_f - f_now
+                # Stall = progress fell off vs the last iteration; an
+                # INCREASE in f (decrease < 0, the eps-too-coarse
+                # divergence regime) is always a stall, whatever the
+                # previous decrease was.
+                stalled = decrease < 0 or (
+                    prev_decrease is not None and prev_decrease > 0
+                    and decrease < cfg.adaptive_stall_ratio * prev_decrease)
+            else:
+                stalled = False
             grown = live_cfg.sketch.sketch_dim // init_sketch_dim
             if stalled and grown < cfg.adaptive_max_growth:
                 new_sketch = dataclasses.replace(

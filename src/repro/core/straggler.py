@@ -119,10 +119,12 @@ class SimClock:
     """
 
     def __init__(self, model: StragglerModel, time: float = 0.0, *,
-                 fleet=None, cost=None, recorder=None, replay=None):
+                 fleet=None, cost=None, recorder=None, replay=None,
+                 pool=None):
         from repro.runtime import FleetEngine   # lazy: runtime imports us
         self.engine = FleetEngine(model, fleet=fleet, cost=cost,
-                                  recorder=recorder, replay=replay)
+                                  recorder=recorder, replay=replay,
+                                  pool=pool)
         if time:
             self.engine.seconds += float(time)
 
@@ -153,15 +155,16 @@ class SimClock:
               policy: str = "wait_all", k: Optional[int] = None,
               comm_units: float = 0.0,
               decodable=None,
-              not_before: Optional[float] = None) -> Tuple[float, jax.Array]:
+              not_before: Optional[float] = None,
+              memory_gb: Optional[float] = None) -> Tuple[float, jax.Array]:
         """Simulate one phase; returns (elapsed, finished_mask).
 
         ``not_before`` (absolute simulated seconds) overlaps this phase
-        with whatever advanced the clock since that time — see
-        ``FleetEngine.run_phase``."""
+        with whatever advanced the clock since that time; ``memory_gb``
+        bills it at its own Lambda size — see ``FleetEngine.run_phase``."""
         elapsed, mask = self.engine.run_phase(
             key, num_workers, work_per_worker=work_per_worker,
             flops_per_worker=flops_per_worker, policy=policy, k=k,
             comm_units=comm_units, decodable=decodable,
-            not_before=not_before)
+            not_before=not_before, memory_gb=memory_gb)
         return elapsed, jnp.asarray(mask)

@@ -18,6 +18,7 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import scheduler
 from repro.core import solvers, straggler
 from repro.core.objectives import Dataset
 from repro.optim.gradient_coding import gradient_coding_phase
@@ -31,6 +32,14 @@ class GiantConfig:
     gcode_redundancy: int = 2
     unit_step: bool = True
     cg_iters: int = 30
+    # Phase dispatch through the repro.scheduler DAG layer.  GIANT's two
+    # stages have a true data edge (the local Newton solves consume the
+    # summed gradient), so its iteration DAG is a chain and the DAG
+    # schedule reproduces the sequential one bit-for-bit — the degenerate
+    # end of the DAG-vs-sequential spectrum, kept as a schedule-equality
+    # regression anchor.  Per-phase memory sizing still applies.
+    schedule: str = "dag"        # dag | sequential
+    phase_memory: bool = False   # bill each stage at its shard working set
     seed: int = 0
     track_test_error: bool = False
 
@@ -47,6 +56,8 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
 
     ``model`` may also be a prebuilt ``straggler.SimClock`` (custom fleet /
     cost / trace config, see ``repro.runtime``)."""
+    if cfg.schedule not in ("dag", "sequential"):
+        raise ValueError(f"unknown schedule {cfg.schedule!r}")
     key = jax.random.PRNGKey(cfg.seed)
     if isinstance(model, straggler.SimClock):
         clock = model
@@ -92,25 +103,50 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
     # GIANT's local solves are CG / Hessian-free (Wang et al.): cg_iters
     # Hessian-vector products over the local shard per iteration.
     newton_flops = 2.0 * per * d * cfg.cg_iters
+    # Both stages stream the same (per x d) shard; CG adds a few d-vectors.
+    shard_mem = (scheduler.lambda_memory_gb(
+        scheduler.matvec_worker_bytes(per, d)) if cfg.phase_memory else None)
     for t in range(cfg.iters):
         key, k1, k2, k3 = jax.random.split(key, 4)
+        dag = (scheduler.DagRun(clock)
+               if cfg.schedule == "dag" and clock is not None else None)
+
+        def phase(k, name, deps, *, policy, kk=None, flops, comm):
+            if dag is not None:
+                # Every dep here is the previous stage — the chain resolves
+                # to the engine's exact sequential path.  A dep that ran on
+                # the direct clock (the gcode round) has no DAG node; the
+                # barrier at the current clock stands in for its edge.
+                known = tuple(dd for dd in deps if dd in dag.results)
+                return dag.dispatch(scheduler.PhaseSpec(
+                    name=name, workers=cfg.num_workers, policy=policy, k=kk,
+                    flops_per_worker=flops, comm_units=comm,
+                    memory_gb=shard_mem, deps=known), key=k,
+                    sequential=len(known) < len(deps)).mask
+            _, mask = clock.phase(k, cfg.num_workers, policy=policy, k=kk,
+                                  flops_per_worker=flops, comm_units=comm,
+                                  memory_gb=shard_mem)
+            return mask
 
         # --- stage 1: gradient -------------------------------------------
         shard_sizes = wts.sum(axis=1)
         if cfg.policy == "ignore" and clock is not None:
-            _, fin = clock.phase(k1, cfg.num_workers, policy="k_of_n",
-                                 k=max(1, int(0.95 * cfg.num_workers)),
-                                 flops_per_worker=grad_flops, comm_units=1.0)
+            fin = phase(k1, "grad", (), policy="k_of_n",
+                        kk=max(1, int(0.95 * cfg.num_workers)),
+                        flops=grad_flops, comm=1.0)
         else:
             fin = jnp.ones((cfg.num_workers,), bool)
             if clock is not None:
                 if cfg.policy == "gcode":
+                    # Coded gradient round: stays on the direct clock (its
+                    # internal schedule predates the DAG layer); the next
+                    # stage launches after it either way.
                     gradient_coding_phase(clock, k1, cfg.num_workers,
                                           cfg.gcode_redundancy,
                                           flops_per_worker=grad_flops)
                 else:
-                    clock.phase(k1, cfg.num_workers, policy="wait_all",
-                                flops_per_worker=grad_flops, comm_units=1.0)
+                    phase(k1, "grad", (), policy="wait_all",
+                          flops=grad_flops, comm=1.0)
         g_locals = lg(xs, ys, wts, w)
         finf = fin.astype(jnp.float32)
         weights = finf * shard_sizes
@@ -120,15 +156,14 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
 
         # --- stage 2: local second-order directions -----------------------
         if cfg.policy == "ignore" and clock is not None:
-            _, fin2 = clock.phase(k2, cfg.num_workers, policy="k_of_n",
-                                  k=max(1, int(0.95 * cfg.num_workers)),
-                                  flops_per_worker=newton_flops,
-                                  comm_units=1.0)
+            fin2 = phase(k2, "local-newton", ("grad",), policy="k_of_n",
+                         kk=max(1, int(0.95 * cfg.num_workers)),
+                         flops=newton_flops, comm=1.0)
         else:
             fin2 = jnp.ones((cfg.num_workers,), bool)
             if clock is not None:
-                clock.phase(k2, cfg.num_workers, policy="wait_all",
-                            flops_per_worker=newton_flops, comm_units=1.0)
+                phase(k2, "local-newton", ("grad",), policy="wait_all",
+                      flops=newton_flops, comm=1.0)
         p_locals = ln(xs, ys, wts, w, g)
         fin2f = fin2.astype(jnp.float32)
         p = -(fin2f[:, None] * p_locals).sum(0) / jnp.maximum(fin2f.sum(), 1.0)
@@ -139,8 +174,8 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
             step = float(linesearch.linesearch_strongly_convex(
                 objective, data, w, p, g))
             if clock is not None:
-                clock.phase(k3, cfg.num_workers, policy="wait_all",
-                            flops_per_worker=grad_flops * 6, comm_units=0.3)
+                phase(k3, "linesearch", ("local-newton",),
+                      policy="wait_all", flops=grad_flops * 6, comm=0.3)
         w = w + step * p
 
         hist["iter"].append(t)

@@ -15,6 +15,7 @@ from repro.runtime.policies import (PhaseContext, PhaseOutcome,
                                     available_policies, get_policy,
                                     register_policy)
 from repro.runtime.trace import (TraceRecorder, TraceReplayer,
+                                 calibrate_fleet_from_trace,
                                  calibrate_from_times, calibrate_from_trace,
                                  load_trace)
 
@@ -23,6 +24,6 @@ __all__ = [
     "FleetConfig", "FleetEngine",
     "PhaseContext", "PhaseOutcome", "available_policies", "get_policy",
     "register_policy",
-    "TraceRecorder", "TraceReplayer", "calibrate_from_times",
-    "calibrate_from_trace", "load_trace",
+    "TraceRecorder", "TraceReplayer", "calibrate_fleet_from_trace",
+    "calibrate_from_times", "calibrate_from_trace", "load_trace",
 ]

@@ -19,10 +19,24 @@ scored on.  One ``run_phase`` call simulates one distributed round:
      ``CostModel`` (GB-seconds + invocation + S3 ops), and the phase is
      appended to the trace recorder if one is attached.
 
+Two scheduler-era extensions (``repro.scheduler``):
+
+  - ``run_phase(memory_gb=...)`` bills THIS phase at its own Lambda size —
+    a per-phase ``CostModel.memory_gb`` override, so per-phase sizing is a
+    cost axis instead of a fleet-wide constant.
+  - ``FleetEngine(pool=WarmPool(...))`` replaces the i.i.d. cold-start coin
+    flip with a warm-container pool keyed off absolute simulated time: an
+    attempt launching at ``t`` (phase start, i.e. ``not_before`` or the
+    current clock, plus the event offset) is cold exactly when no unexpired
+    container is free, so bursty DAG schedules pay cold starts that steady
+    sequential schedules do not.  Policy relaunches stay on the i.i.d.
+    model (duplicates are a burst into fresh capacity by construction).
+
 Determinism: all run durations come from ``model.sample_times`` under keys
 folded from the phase key, and all lifecycle coin flips come from a numpy
 ``Generator`` seeded from the same key — identical seeds give bit-identical
-``(seconds, dollars)``, which is what makes trace replay exact.
+``(seconds, dollars)``, which is what makes trace replay exact.  Pool state
+mutates in phase-dispatch order, which the scheduler canonicalizes.
 """
 from __future__ import annotations
 
@@ -71,7 +85,7 @@ class FleetEngine:
 
     def __init__(self, model, fleet: Optional[FleetConfig] = None,
                  cost: Optional[CostModel] = None,
-                 recorder=None, replay=None):
+                 recorder=None, replay=None, pool=None):
         self.model = model
         self.fleet = fleet if fleet is not None else FleetConfig()
         self.cost_model = cost if cost is not None else CostModel()
@@ -79,6 +93,7 @@ class FleetEngine:
         self.seconds = 0.0
         self.recorder = recorder
         self.replay = replay
+        self.pool = pool       # scheduler.WarmPool (or None: i.i.d. colds)
         self._phase_idx = 0
 
     # ------------------------------------------------------------- totals
@@ -99,13 +114,22 @@ class FleetEngine:
     # ----------------------------------------------------- lifecycle core
     def _lifecycle(self, key: jax.Array, rng: np.random.Generator,
                    num_workers: int, work_per_worker: float,
-                   flops_per_worker: Optional[float]
-                   ) -> Tuple[np.ndarray, List[Tuple[float, float]], int]:
+                   flops_per_worker: Optional[float], t0: float = 0.0
+                   ) -> Tuple[np.ndarray, List[Tuple[float, float]], int,
+                              dict]:
         """Event-driven per-worker lifecycle: cold start -> running ->
         done | failed-with-retry.  Returns (completion_times, attempts,
-        successes); ``attempts`` are (launch, end) pairs for billing."""
+        successes, stats); ``attempts`` are (launch, end) pairs for billing
+        and ``stats`` carries retries / cold-start telemetry for the trace.
+
+        ``t0`` is the phase's absolute launch time — the warm pool (when
+        attached) is consulted at ``t0 + event_time``, so overlapped and
+        bursty schedules see the pool as it stands at their true launch
+        instant."""
         fl = self.fleet
         round_times: dict = {}
+        stats = {"retries": 0, "warm": 0, "cold": 0,
+                 "cold_delays": []}   # type: dict
 
         def duration(worker: int, attempt: int) -> float:
             # One jax sample round per retry wave, lazily — the common
@@ -127,10 +151,20 @@ class FleetEngine:
         seq = num_workers
         while events:
             t, _, w, attempt = heapq.heappop(events)
-            cold = (fl.cold_start_prob > 0.0
-                    and rng.random() < fl.cold_start_prob)
+            if self.pool is not None:
+                # Warm-pool model: cold exactly when no unexpired container
+                # is free at the attempt's absolute launch time.
+                cold = not self.pool.acquire(t0 + t)
+            else:
+                cold = (fl.cold_start_prob > 0.0
+                        and rng.random() < fl.cold_start_prob)
             t_cold = (rng.uniform(fl.cold_start_lo, fl.cold_start_hi)
                       if cold else 0.0)
+            if cold:
+                stats["cold"] += 1
+                stats["cold_delays"].append(float(t_cold))
+            elif self.pool is not None:
+                stats["warm"] += 1
             run = duration(w, attempt)
             fails = (attempt < fl.max_retries and fl.failure_rate > 0.0
                      and rng.random() < fl.failure_rate)
@@ -138,6 +172,10 @@ class FleetEngine:
                 # Dies partway through; master notices and relaunches.
                 t_fail = t + t_cold + rng.uniform(0.05, 0.95) * run
                 attempts.append((t, t_fail))
+                stats["retries"] += 1
+                if self.pool is not None:
+                    # A function error does not tear the container down.
+                    self.pool.release(t0 + t_fail)
                 heapq.heappush(
                     events, (t_fail + fl.retry_backoff, seq, w, attempt + 1))
                 seq += 1
@@ -146,7 +184,9 @@ class FleetEngine:
                 attempts.append((t, end))
                 successes += 1
                 done[w] = end
-        return done, attempts, successes
+                if self.pool is not None:
+                    self.pool.release(t0 + end)
+        return done, attempts, successes, stats
 
     # ------------------------------------------------------------- phases
     def run_phase(self, key: jax.Array, num_workers: int, *,
@@ -155,7 +195,8 @@ class FleetEngine:
                   policy: str = "wait_all", k: Optional[int] = None,
                   comm_units: float = 0.0,
                   decodable: Optional[Callable[[np.ndarray], bool]] = None,
-                  not_before: Optional[float] = None
+                  not_before: Optional[float] = None,
+                  memory_gb: Optional[float] = None
                   ) -> Tuple[float, np.ndarray]:
         """Simulate one distributed phase; returns (elapsed, finished_mask).
 
@@ -172,6 +213,10 @@ class FleetEngine:
         the overlapped makespan is never longer than the sequential one.
         Billing is unaffected — every attempt costs the same GB-seconds
         wherever it sits on the timeline.
+
+        ``memory_gb`` bills this phase at its own Lambda size (a per-phase
+        ``CostModel.memory_gb`` override, recorded in the trace row);
+        None bills at the fleet-wide default.
         """
         if self.replay is not None:
             elapsed, mask, entry, advance = self.replay.next_phase(
@@ -182,8 +227,9 @@ class FleetEngine:
             return elapsed, mask
 
         rng = _np_rng(key)
-        done, attempts, successes = self._lifecycle(
-            key, rng, num_workers, work_per_worker, flops_per_worker)
+        t0 = float(self.seconds if not_before is None else not_before)
+        done, attempts, successes, stats = self._lifecycle(
+            key, rng, num_workers, work_per_worker, flops_per_worker, t0)
 
         relaunch_cache: dict = {}
 
@@ -217,13 +263,16 @@ class FleetEngine:
         elapsed = float(outcome.elapsed
                         + self.model.comm_per_unit * comm_units)
         all_attempts = attempts + list(outcome.extra_attempts)
-        entry = bill_phase(self.cost_model, all_attempts,
+        cost_model = (self.cost_model if memory_gb is None else
+                      dataclasses.replace(self.cost_model,
+                                          memory_gb=float(memory_gb)))
+        entry = bill_phase(cost_model, all_attempts,
                            successes + outcome.extra_successes,
                            comm_units)
-        if self.cost_model.billing == "reserved":
+        if cost_model.billing == "reserved":
             # Fixed cluster: every node bills the phase's wall-clock
             # (idle-behind-the-straggler time included), not its own work.
-            entry.gb_seconds = (self.cost_model.memory_gb * num_workers
+            entry.gb_seconds = (cost_model.memory_gb * num_workers
                                 * elapsed)
         if not_before is None:
             advance = elapsed   # not (now + e) - now: that rounds off a ULP
@@ -232,9 +281,15 @@ class FleetEngine:
         self.seconds += advance
         self.ledger.add(entry)
         if self.recorder is not None:
+            # free_at, not len(): lazy TTL expiry means the raw pool still
+            # holds containers no launch at the current clock could use.
+            pool_free = (self.pool.free_at(self.seconds)
+                         if self.pool is not None else None)
             self.recorder.record_phase(
                 self._phase_idx, policy=policy, num_workers=num_workers,
                 k=k, elapsed=elapsed, mask=np.asarray(outcome.mask, bool),
-                entry=entry, worker_times=done, advance=advance)
+                entry=entry, worker_times=done, advance=advance,
+                memory_gb=None if memory_gb is None else float(memory_gb),
+                stats=stats, pool_free=pool_free)
         self._phase_idx += 1
         return elapsed, np.asarray(outcome.mask, dtype=bool)

@@ -12,6 +12,19 @@ hex-encoded (worker 0 = MSB of the first byte).  Floats are serialized via
 ``repr`` (json default), which round-trips IEEE doubles exactly — replaying
 a recorded run reproduces bit-identical ``(seconds, dollars)`` totals.
 
+Schema v2 (scheduler-era, every field optional => v1 traces replay
+unchanged and v1 readers ignore the new keys):
+
+  - ``memory_gb``: present when the phase was billed at a per-phase Lambda
+    size (``run_phase(memory_gb=...)`` override).
+  - ``pool``: ``{"warm": w, "cold": c, "free": f}`` when a ``WarmPool`` is
+    attached — warm hits / cold starts among this phase's lifecycle
+    attempts, and the pool's free-container count after the phase.
+  - ``retries`` + ``cold_delays`` (opt-in, ``TraceRecorder(lifecycle=
+    True)``): failure-retry count and the drawn cold-start delays of each
+    phase — what ``calibrate_fleet_from_trace`` fits a ``FleetConfig``
+    (failure rate, cold-start probability and bounds) from.
+
 ``worker_times`` (opt-in, ``TraceRecorder(worker_times=True)``) stores the
 per-worker completion times of each phase; ``calibrate_from_trace`` fits a
 ``StragglerModel`` to their empirical shape (median base, lognormal body
@@ -41,16 +54,25 @@ def _mask_from_hex(s: str, n: int) -> np.ndarray:
 
 @dataclasses.dataclass
 class TraceRecorder:
-    """Collects phase rows; ``dump`` writes JSONL."""
+    """Collects phase rows; ``dump`` writes JSONL.
+
+    ``lifecycle=True`` additionally records each phase's failure-retry
+    count and drawn cold-start delays (schema v2) — the raw material for
+    ``calibrate_fleet_from_trace``.  Off by default so default recordings
+    stay byte-identical to pre-v2 traces."""
 
     worker_times: bool = False
+    lifecycle: bool = False
     rows: List[dict] = dataclasses.field(default_factory=list)
 
     def record_phase(self, phase: int, *, policy: str, num_workers: int,
                      k: Optional[int], elapsed: float, mask: np.ndarray,
                      entry: CostLedger,
                      worker_times: Optional[np.ndarray] = None,
-                     advance: Optional[float] = None) -> None:
+                     advance: Optional[float] = None,
+                     memory_gb: Optional[float] = None,
+                     stats: Optional[dict] = None,
+                     pool_free: Optional[int] = None) -> None:
         row = {"kind": "phase", "phase": phase, "policy": policy,
                "workers": int(num_workers), "k": k,
                "elapsed": float(elapsed), "mask": _mask_to_hex(mask)}
@@ -59,6 +81,17 @@ class TraceRecorder:
             # by less than the phase duration.  Absent for sequential
             # phases so pre-overlap traces replay unchanged.
             row["advance"] = float(advance)
+        if memory_gb is not None:
+            row["memory_gb"] = float(memory_gb)
+        if pool_free is not None:
+            # Pool attached: warm/cold split of this phase's lifecycle
+            # attempts and the free-container count after the phase.
+            row["pool"] = {"warm": int(stats["warm"]) if stats else 0,
+                           "cold": int(stats["cold"]) if stats else 0,
+                           "free": int(pool_free)}
+        if self.lifecycle and stats is not None:
+            row["retries"] = int(stats["retries"])
+            row["cold_delays"] = [float(t) for t in stats["cold_delays"]]
         row.update(entry.as_dict())
         if self.worker_times and worker_times is not None:
             row["worker_times"] = [float(t) for t in worker_times]
@@ -166,3 +199,56 @@ def calibrate_from_trace(path, tail_cut: float = 1.25) -> StragglerModel:
     scale = float(np.mean(medians))   # representative per-phase base time
     return calibrate_from_times(np.concatenate(pooled) * scale,
                                 tail_cut=tail_cut)
+
+
+def calibrate_fleet_from_trace(path) -> "FleetConfig":
+    """Fit a ``FleetConfig`` (failure rate + cold-start statistics) to a
+    schema-v2 lifecycle trace (``TraceRecorder(lifecycle=True)``).
+
+    Estimators, over all phase rows:
+
+      - ``failure_rate``: retries / lifecycle launches.  Each lifecycle
+        attempt below the retry cap fails independently with rate p, so
+        launches per worker are geometric and failures/launches -> p
+        (the retry-cap truncation bias is O(p^max_retries)).
+      - ``cold_start_prob``: cold starts / lifecycle launches — the i.i.d.
+        reading of the trace; a warm-pool trace yields the *effective*
+        cold rate its schedule produced, which is the number a pool-less
+        simulation of the same workload should use.
+      - ``cold_start_lo`` / ``hi``: min / max of the recorded cold delays
+        (consistent for the U[lo, hi] the engine draws from).
+
+    The closing loop: a synthetic "public Lambda trace" recorded under a
+    known fleet round-trips to that fleet's parameters (see
+    ``tests/fixtures/lambda_trace_synthetic.jsonl``).
+    """
+    from repro.runtime.engine import FleetConfig   # engine does not import us
+    with open(path) as f:
+        rows = [json.loads(line) for line in f if line.strip()]
+    phase_rows = [r for r in rows if r.get("kind") == "phase"]
+    if not any("retries" in r for r in phase_rows):
+        raise ValueError(
+            f"no lifecycle rows in {path}; record with "
+            "TraceRecorder(lifecycle=True)")
+    launches = 0
+    retries = 0
+    delays: list = []
+    for r in phase_rows:
+        if "retries" not in r:
+            continue
+        retries += int(r["retries"])
+        launches += int(r["workers"]) + int(r["retries"])
+        delays.extend(r.get("cold_delays", ()))
+    if launches == 0:
+        raise ValueError(f"lifecycle rows in {path} contain no launches")
+    failure_rate = retries / launches
+    cold_prob = len(delays) / launches
+    if delays:
+        lo, hi = float(min(delays)), float(max(delays))
+        if hi <= lo:
+            hi = lo + 1e-6
+    else:
+        dflt = FleetConfig()
+        lo, hi = dflt.cold_start_lo, dflt.cold_start_hi
+    return FleetConfig(failure_rate=failure_rate, cold_start_prob=cold_prob,
+                       cold_start_lo=lo, cold_start_hi=hi)

@@ -1,0 +1,29 @@
+"""Phase-DAG scheduler: the layer between optimizers and the fleet engine.
+
+Optimizers declare one iteration as a DAG of ``PhaseSpec``s (workers,
+termination policy, per-worker work, declared Lambda size, dependency
+edges); the scheduler dispatches independent phases concurrently through
+``FleetEngine.run_phase(not_before=...)``, bills each phase at its own
+Lambda size, and — with a ``WarmPool`` attached to the engine — makes
+cold-start dynamics a function of the schedule's shape instead of a coin
+flip.
+
+See ``src/repro/scheduler/README.md`` for the DAG model, pool semantics,
+and the trace schema v2 fields this subsystem adds.
+"""
+from repro.scheduler.dag import DagResult, DagRun, PhaseResult, run_dag
+from repro.scheduler.pool import WarmPool
+from repro.scheduler.sizing import (LAMBDA_MAX_GB, LAMBDA_MIN_GB,
+                                    LAMBDA_STEP_GB, distavg_worker_bytes,
+                                    lambda_memory_gb, matvec_worker_bytes,
+                                    sketch_worker_bytes)
+from repro.scheduler.spec import PhaseSpec, canonical_order, validate_dag
+
+__all__ = [
+    "DagResult", "DagRun", "PhaseResult", "run_dag",
+    "WarmPool",
+    "LAMBDA_MAX_GB", "LAMBDA_MIN_GB", "LAMBDA_STEP_GB",
+    "distavg_worker_bytes", "lambda_memory_gb", "matvec_worker_bytes",
+    "sketch_worker_bytes",
+    "PhaseSpec", "canonical_order", "validate_dag",
+]

@@ -1,0 +1,95 @@
+"""Warm-container pool: stateful cold-start dynamics keyed off the event clock.
+
+The fleet engine's historical cold-start model is an i.i.d. coin flip per
+attempt (``FleetConfig.cold_start_prob``), which cannot express the thing
+that actually distinguishes schedules on Lambda: a *steady* sequential
+schedule keeps re-hitting the same warm containers, while a *bursty* DAG
+schedule that launches two fan-outs concurrently needs twice the container
+footprint at once — the provider has no warm container to give, so the
+burst pays cold starts the sequential schedule never sees.
+
+``WarmPool`` models exactly that and nothing more:
+
+  - ``acquire(t)``: a launch at absolute simulated time ``t`` takes the
+    most-recently-used container that is free (``available_at <= t``) and
+    not expired (``t - available_at <= ttl``).  MRU selection mirrors
+    provider behaviour (hot containers stay hot; idle ones age out) and is
+    what makes steady schedules cheap.  Returns True (warm) or False
+    (cold start — a new container is created for this attempt).
+  - ``release(t)``: the attempt ended at ``t``; its container re-enters the
+    pool idle from ``t``.  Failed attempts release too — a function error
+    does not tear the container down.
+  - Containers idle longer than ``ttl`` are expired lazily at the next
+    acquire; ``capacity`` (optional) LRU-evicts beyond a pool-size cap.
+
+The pool is attached to a ``FleetEngine`` (``SimClock(..., pool=...)``) and
+consulted *instead of* the coin flip; the cold-start delay itself still
+comes from ``FleetConfig.cold_start_lo/hi``.  State mutates in dispatch
+order: an overlapped phase (``not_before`` in the past) acquires at its
+launch time but against the pool as it exists when the phase is
+*dispatched* — a deliberate approximation that keeps the simulation
+single-pass and deterministic under the scheduler's canonical phase order.
+
+Policy relaunches (speculative / hedged duplicates) bypass the pool and
+keep the i.i.d. model: duplicates are by construction a burst into fresh
+capacity.
+"""
+from __future__ import annotations
+
+import bisect
+from typing import List, Optional
+
+
+class WarmPool:
+    """Container pool with TTL expiry; all times are absolute simulated
+    seconds on the fleet engine's clock."""
+
+    def __init__(self, ttl: float = 300.0, capacity: Optional[int] = None,
+                 prewarmed: int = 0):
+        if ttl <= 0:
+            raise ValueError(f"pool ttl must be positive, got {ttl}")
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"pool capacity must be >= 1, got {capacity}")
+        self.ttl = float(ttl)
+        self.capacity = capacity
+        # Sorted idle-since times; entry i is a container free from _free[i].
+        self._free: List[float] = [0.0] * int(prewarmed)
+        self.warm_hits = 0
+        self.cold_starts = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def _expire(self, t: float) -> None:
+        cut = bisect.bisect_left(self._free, t - self.ttl)
+        if cut:
+            del self._free[:cut]
+
+    def acquire(self, t: float) -> bool:
+        """Take a warm container for a launch at time ``t``; True if one was
+        available (no cold start), False if the attempt starts cold."""
+        t = float(t)
+        self._expire(t)
+        # MRU: the container with the largest available_at <= t.
+        i = bisect.bisect_right(self._free, t) - 1
+        if i >= 0:
+            del self._free[i]
+            self.warm_hits += 1
+            return True
+        self.cold_starts += 1
+        return False
+
+    def release(self, t: float) -> None:
+        """Return a container to the pool, idle from time ``t``."""
+        bisect.insort(self._free, float(t))
+        if self.capacity is not None and len(self._free) > self.capacity:
+            del self._free[0]   # LRU evict: the longest-idle container
+
+    # ------------------------------------------------------------- inspect
+    def free_at(self, t: float) -> int:
+        """How many warm, unexpired containers a launch at ``t`` could use."""
+        t = float(t)
+        lo = bisect.bisect_left(self._free, t - self.ttl)
+        hi = bisect.bisect_right(self._free, t)
+        return max(0, hi - lo)
+
+    def __len__(self) -> int:
+        return len(self._free)

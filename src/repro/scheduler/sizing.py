@@ -1,0 +1,59 @@
+"""Per-phase Lambda memory sizing.
+
+The paper fixes every worker at 3 GB (Sec. 5), but the phases of one
+Newton iteration have very different working sets: a coded-matvec worker
+holds one encoded block and a vector, a Hessian-sketch worker holds a
+sketch block plus a Gram tile, a distributed-averaging worker holds a
+whole d x d system.  Lambda bills GB-seconds, so right-sizing each phase
+is a straight cost axis — ``PhaseSpec.memory_gb`` carries the declared
+size and the fleet engine bills that phase through a per-phase
+``CostModel`` override.
+
+``lambda_memory_gb`` maps a working-set byte count to a billable Lambda
+size: bytes x headroom (interpreter + runtime overhead), rounded UP to
+the 64 MB allocation granularity of the paper-era Lambda platform, and
+clamped to the platform bounds.  Deterministic, pure, and intentionally
+conservative — undersizing a real Lambda OOMs the worker; oversizing
+just costs money.
+"""
+from __future__ import annotations
+
+import math
+
+LAMBDA_MIN_GB = 0.125      # 128 MB platform floor
+LAMBDA_MAX_GB = 10.0       # current platform ceiling
+LAMBDA_STEP_GB = 0.0625    # 64 MB allocation granularity
+
+FLOAT32_BYTES = 4
+
+
+def lambda_memory_gb(working_set_bytes: float, headroom: float = 2.0,
+                     floor: float = LAMBDA_MIN_GB,
+                     ceil: float = LAMBDA_MAX_GB) -> float:
+    """Billable Lambda size (GB) for a declared per-worker working set."""
+    if working_set_bytes < 0:
+        raise ValueError("working_set_bytes must be >= 0")
+    gb = working_set_bytes * headroom / 2.0 ** 30
+    stepped = math.ceil(gb / LAMBDA_STEP_GB) * LAMBDA_STEP_GB
+    return float(min(ceil, max(floor, stepped)))
+
+
+def matvec_worker_bytes(block_rows: int, cols: int,
+                        dtype_bytes: int = FLOAT32_BYTES) -> float:
+    """Coded-matvec worker: one encoded (block_rows x cols) block, the
+    input vector, and the output block."""
+    return float(dtype_bytes) * (block_rows * cols + cols + block_rows)
+
+
+def sketch_worker_bytes(block_size: int, d: int,
+                        dtype_bytes: int = FLOAT32_BYTES) -> float:
+    """Hessian-sketch worker (Alg. 2): one (block_size x d) sketch block
+    plus its (d x d)-bounded Gram tile contribution."""
+    return float(dtype_bytes) * (block_size * d + d * d)
+
+
+def distavg_worker_bytes(block_size: int, d: int,
+                         dtype_bytes: int = FLOAT32_BYTES) -> float:
+    """Distributed-averaging worker: sketch block, local d x d system,
+    and its factorization workspace."""
+    return float(dtype_bytes) * (block_size * d + 2 * d * d + 2 * d)

@@ -8,7 +8,8 @@ entry point used by ``core.newton`` (``NewtonConfig.sketch_family``).
 """
 from repro.sketching.base import SketchFamily, next_pow2
 from repro.sketching.registry import available, get, register
-from repro.sketching.debias import debias_direction, mp_factor
+from repro.sketching.debias import (debias_direction, mp_factor, mp_stalled,
+                                    rows_for_target)
 
 # Importing a family module registers it.
 from repro.sketching.oversketch import OverSketchFamily
@@ -20,7 +21,8 @@ from repro.sketching.leverage import LeverageFamily
 
 __all__ = [
     "SketchFamily", "available", "get", "register",
-    "debias_direction", "mp_factor", "next_pow2",
+    "debias_direction", "mp_factor", "mp_stalled", "rows_for_target",
+    "next_pow2",
     "OverSketchFamily", "SRHTFamily", "SJLTFamily", "GaussianFamily",
     "NystromFamily", "LeverageFamily",
 ]

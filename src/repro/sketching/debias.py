@@ -41,3 +41,24 @@ def mp_factor(dim: int, sketch_rows) -> jax.Array:
 def debias_direction(p: jax.Array, dim: int, sketch_rows) -> jax.Array:
     """Rescale a sketched Newton direction to be asymptotically unbiased."""
     return p * mp_factor(dim, sketch_rows).astype(p.dtype)
+
+
+def mp_stalled(dim: int, sketch_rows, target: float) -> bool:
+    """Is the sketch too biased to trust at this survivor dimension?
+
+    The MP factor 1 - d/m is a *measured* per-iteration quantity (m = the
+    sketch rows that actually arrived), so it says directly when the
+    sketch dimension is the binding constraint: gamma below ``target``
+    means the inverse-bias correction is throwing away more than
+    (1 - target) of the step — grow the sketch now, before the f-decrease
+    heuristic can even observe the resulting stall
+    (``NewtonConfig.adaptive_metric="mp"``)."""
+    return bool(mp_factor(dim, sketch_rows) < target)
+
+
+def rows_for_target(dim: int, target: float) -> int:
+    """Smallest sketch-row count whose MP factor meets ``target``."""
+    if not 0.0 < target < 1.0:
+        raise ValueError(f"target must be in (0, 1), got {target}")
+    import math
+    return int(math.ceil(dim / (1.0 - target)))

@@ -17,9 +17,16 @@ pin three contracts the runtime refactors must not break:
    match), and a live record -> replay round trip is bit-identical.
 3. ``calibrate_from_trace`` still accepts the fixture's worker_times.
 
+A second fixture, ``dag_trace_golden.jsonl``, pins the scheduler-era
+schema v2: the same contracts for a DAG-SCHEDULED, WARM-POOL, per-phase-
+sized run (rows carry ``memory_gb``, ``pool``, ``retries``/``cold_delays``
+and an overlapped phase's ``advance``) — and the v1 fixture above is the
+standing proof that pre-v2 traces replay unchanged.
+
 Regenerate (only after an INTENTIONAL engine/trace-format change):
 
     PYTHONPATH=src python tests/test_golden_trace.py --regen
+    PYTHONPATH=src python tests/test_golden_trace.py --regen-dag
 """
 import json
 import pathlib
@@ -30,9 +37,12 @@ import pytest
 from repro.core.straggler import SimClock, StragglerModel
 from repro.runtime import (CostLedger, CostModel, FleetConfig, TraceRecorder,
                            TraceReplayer, calibrate_from_trace)
+from repro.scheduler import PhaseSpec, WarmPool, run_dag
 
 FIXTURE = pathlib.Path(__file__).parent / "fixtures" / \
     "fleet_trace_golden.jsonl"
+DAG_FIXTURE = pathlib.Path(__file__).parent / "fixtures" / \
+    "dag_trace_golden.jsonl"
 _FLEET = FleetConfig(failure_rate=0.15, cold_start_prob=0.25)
 
 
@@ -51,22 +61,41 @@ def _drive(clock):
     return clock
 
 
-def _load():
-    rows = [json.loads(line) for line in FIXTURE.read_text().splitlines()
+def _drive_dag(clock):
+    """The golden DAG schedule: a gradient-shaped chain concurrent with a
+    Hessian-shaped fan-out (whose row carries ``advance``), joined by a
+    line-search phase, with per-phase Lambda sizes on two nodes."""
+    run_dag(clock, jax.random.PRNGKey(42), [
+        PhaseSpec("gx", 10, policy="k_of_n", k=8, flops_per_worker=3e5,
+                  comm_units=1.0, memory_gb=0.5),
+        PhaseSpec("gxt", 10, policy="k_of_n", k=8, flops_per_worker=3e5,
+                  comm_units=1.0, deps=("gx",), memory_gb=0.5),
+        PhaseSpec("hess", 16, policy="k_of_n", k=13, flops_per_worker=6e5,
+                  comm_units=1.0, memory_gb=1.5),
+        PhaseSpec("ls", 6, flops_per_worker=1e5, comm_units=0.5,
+                  deps=("gxt", "hess")),
+    ])
+    clock.charge(0.0625)
+    return clock
+
+
+def _dag_pool():
+    return WarmPool(ttl=20.0, prewarmed=4)
+
+
+def _load(fixture=FIXTURE):
+    rows = [json.loads(line) for line in fixture.read_text().splitlines()
             if line.strip()]
     meta = rows[0]
     assert meta["kind"] == "meta"
     return meta, rows[1:]
 
 
-def test_golden_fixture_replays_bit_identical():
-    meta, rows = _load()
-    assert any("advance" in r for r in rows), \
-        "fixture must contain an overlapped phase"
-    replayed = _drive(SimClock(StragglerModel(),
-                               replay=TraceReplayer(rows)))
-    # Independent arithmetic on the raw rows, in row order (same float
-    # accumulation order as the engine — equality is exact, not approx).
+def _assert_replay_matches_raw_rows(drive, rows):
+    """Replay ``rows`` through ``drive`` and check the totals against
+    independent arithmetic on the raw rows, in row order (same float
+    accumulation order as the engine — equality is exact, not approx)."""
+    replayed = drive(SimClock(StragglerModel(), replay=TraceReplayer(rows)))
     seconds = 0.0
     ledger = CostLedger()
     for r in rows:
@@ -82,34 +111,74 @@ def test_golden_fixture_replays_bit_identical():
     assert replayed.dollars == ledger.dollars(CostModel())
 
 
-def test_golden_schedule_rerecord_matches_fixture(tmp_path):
-    meta, rows = _load()
-    rec = TraceRecorder(worker_times=True)
-    live = _drive(SimClock(StragglerModel(), fleet=_FLEET, recorder=rec))
-    # Live record -> replay round trip is bit-identical in any version.
+def _assert_rerecord_matches(drive, rec, meta, rows, tmp_path, pool=None):
+    """Re-drive ``drive`` live into ``rec``: the record -> replay round
+    trip must be bit-identical in any version, the schedule structure must
+    always match the committed ``rows``, and under the fixture's jax
+    version the rows must be IDENTICAL (json round-trip normalizes float
+    repr, mask hex, advance fields)."""
+    live = drive(SimClock(StragglerModel(), fleet=_FLEET, recorder=rec,
+                          pool=pool))
     path = tmp_path / "rerecord.jsonl"
     rec.dump(path)
     from repro.runtime import load_trace
-    replayed = _drive(SimClock(StragglerModel(), replay=load_trace(path)))
+    replayed = drive(SimClock(StragglerModel(), replay=load_trace(path)))
     assert replayed.time == live.time
     assert replayed.dollars == live.dollars
-    # Schedule structure must always match the committed fixture...
     assert [(r["kind"], r.get("policy"), r.get("workers"), r.get("k"))
             for r in rec.rows] == \
         [(r["kind"], r.get("policy"), r.get("workers"), r.get("k"))
          for r in rows]
-    # ...and under the fixture's jax version the rows must be IDENTICAL
-    # (json round-trip normalizes float repr, mask hex, advance fields).
     if jax.__version__ != meta["jax_version"]:
         pytest.skip(f"fixture recorded under jax {meta['jax_version']}, "
                     f"running {jax.__version__}: structural check only")
     assert [json.loads(json.dumps(r)) for r in rec.rows] == rows
 
 
+def test_golden_fixture_replays_bit_identical():
+    _, rows = _load()
+    assert any("advance" in r for r in rows), \
+        "fixture must contain an overlapped phase"
+    _assert_replay_matches_raw_rows(_drive, rows)
+
+
+def test_golden_schedule_rerecord_matches_fixture(tmp_path):
+    meta, rows = _load()
+    _assert_rerecord_matches(_drive, TraceRecorder(worker_times=True),
+                             meta, rows, tmp_path)
+
+
 def test_golden_fixture_calibrates():
     model = calibrate_from_trace(FIXTURE)
     assert model.base_time > 0
     assert 0.0 <= model.p_tail <= 1.0
+
+
+# ------------------------------------------------- scheduler-era DAG fixture
+def test_dag_golden_fixture_replays_bit_identical():
+    _, rows = _load(DAG_FIXTURE)
+    phase_rows = [r for r in rows if r["kind"] == "phase"]
+    assert any("advance" in r for r in phase_rows), \
+        "fixture must contain an overlapped (DAG-concurrent) phase"
+    assert any("memory_gb" in r for r in phase_rows), \
+        "fixture must contain a per-phase-sized phase"
+    assert all("pool" in r for r in phase_rows), \
+        "fixture must be a warm-pool run"
+    _assert_replay_matches_raw_rows(_drive_dag, rows)
+
+
+def test_dag_golden_schedule_rerecord_matches_fixture(tmp_path):
+    meta, rows = _load(DAG_FIXTURE)
+    _assert_rerecord_matches(
+        _drive_dag, TraceRecorder(worker_times=True, lifecycle=True),
+        meta, rows, tmp_path, pool=_dag_pool())
+
+
+def test_dag_golden_fixture_fleet_calibrates():
+    from repro.runtime import calibrate_fleet_from_trace
+    fleet = calibrate_fleet_from_trace(DAG_FIXTURE)
+    assert 0.0 <= fleet.failure_rate <= 1.0
+    assert fleet.cold_start_hi >= fleet.cold_start_lo > 0.0
 
 
 def _regen():
@@ -125,9 +194,26 @@ def _regen():
     print(f"wrote {FIXTURE} ({len(rec.rows)} rows)")
 
 
+def _regen_dag():
+    rec = TraceRecorder(worker_times=True, lifecycle=True)
+    _drive_dag(SimClock(StragglerModel(), fleet=_FLEET, pool=_dag_pool(),
+                        recorder=rec))
+    DAG_FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+    with open(DAG_FIXTURE, "w") as f:
+        f.write(json.dumps({"kind": "meta", "jax_version": jax.__version__,
+                            "generator": "tests/test_golden_trace.py "
+                                         "--regen-dag"}) + "\n")
+        for row in rec.rows:
+            f.write(json.dumps(row) + "\n")
+    print(f"wrote {DAG_FIXTURE} ({len(rec.rows)} rows)")
+
+
 if __name__ == "__main__":
     import sys
     if "--regen" in sys.argv:
         _regen()
+    elif "--regen-dag" in sys.argv:
+        _regen_dag()
     else:
-        sys.exit("usage: python tests/test_golden_trace.py --regen")
+        sys.exit("usage: python tests/test_golden_trace.py "
+                 "[--regen | --regen-dag]")

@@ -1,0 +1,506 @@
+"""Phase-DAG scheduler subsystem tests.
+
+Contracts pinned here:
+
+1. **Determinism**: same seed => bit-identical ``(seconds, dollars)`` for
+   ANY topological declaration order of the same DAG — the scheduler
+   canonicalizes dispatch, so declaration order never leaks into totals.
+2. **Makespan dominance**: a DAG schedule is never slower than the
+   sequential dispatch of the same phases (property-tested over random
+   DAGs via the hypothesis shim), and a chain DAG — every edge serializes
+   — is bit-identical to it.
+3. **Warm-pool dynamics**: bursty DAG schedules pay at least as many cold
+   starts as steady sequential ones; TTL expiry and MRU reuse behave.
+4. **Per-phase Lambda sizing**: ``memory_gb`` overrides bill proportionally
+   and round-trip through the v2 trace schema; pre-v2 replays are
+   untouched (see also test_golden_trace).
+5. **Optimizer wiring**: ``oversketched_newton(schedule="dag")`` produces
+   the same iterates as sequential with a strictly smaller makespan and
+   equal dollars; GIANT's chain DAG is bit-equal to sequential.
+6. **Fleet calibration**: the committed synthetic Lambda trace
+   (``fixtures/lambda_trace_synthetic.jsonl``) round-trips through
+   ``calibrate_fleet_from_trace`` to the FleetConfig that recorded it.
+
+Regenerate the synthetic Lambda fixture (only after an INTENTIONAL
+schema/engine change):
+
+    PYTHONPATH=src python tests/test_scheduler.py --regen-lambda
+"""
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import newton, sketch
+from repro.core.objectives import Dataset, LogisticRegression
+from repro.core.straggler import SimClock, StragglerModel
+from repro.optim.giant import GiantConfig, giant
+from repro.runtime import (FleetConfig, TraceRecorder,
+                           calibrate_fleet_from_trace, load_trace)
+from repro.scheduler import (DagRun, PhaseSpec, WarmPool, canonical_order,
+                             lambda_memory_gb, run_dag, validate_dag)
+
+LAMBDA_FIXTURE = pathlib.Path(__file__).parent / "fixtures" / \
+    "lambda_trace_synthetic.jsonl"
+# The fleet the synthetic "public" Lambda trace was recorded under; the
+# calibration round-trip must recover these numbers.
+LAMBDA_FLEET = FleetConfig(failure_rate=0.2, cold_start_prob=0.3,
+                           cold_start_lo=0.5, cold_start_hi=2.0)
+
+MODEL = StragglerModel(p_tail=0.1, tail_hi=3.0)
+
+
+def _diamond(workers=12):
+    """grad chain || hessian fan-out -> join: the Newton iteration shape."""
+    return [
+        PhaseSpec("gx", workers, policy="k_of_n", k=workers - 2,
+                  flops_per_worker=3e5, comm_units=1.0),
+        PhaseSpec("gxt", workers, policy="k_of_n", k=workers - 2,
+                  flops_per_worker=3e5, comm_units=1.0, deps=("gx",)),
+        PhaseSpec("hess", 2 * workers, policy="k_of_n", k=2 * workers - 3,
+                  flops_per_worker=6e5, comm_units=1.0),
+        PhaseSpec("ls", workers, flops_per_worker=1e5, comm_units=0.5,
+                  deps=("gxt", "hess")),
+    ]
+
+
+def _logistic(n=800, d=16):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d))
+    y = jnp.sign(x @ jax.random.normal(jax.random.PRNGKey(1), (d,)))
+    return LogisticRegression(), Dataset(x=x, y=y), jnp.zeros(d)
+
+
+# ------------------------------------------------------------- validation
+def test_duplicate_phase_name_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        validate_dag([PhaseSpec("a", 2), PhaseSpec("a", 2)])
+
+
+def test_unknown_dep_rejected():
+    with pytest.raises(ValueError, match="unknown"):
+        validate_dag([PhaseSpec("a", 2, deps=("ghost",))])
+
+
+def test_cycle_rejected():
+    with pytest.raises(ValueError, match="cycle"):
+        validate_dag([PhaseSpec("a", 2, deps=("b",)),
+                      PhaseSpec("b", 2, deps=("a",))])
+
+
+def test_canonical_order_is_declaration_invariant():
+    specs = _diamond()
+    base = [s.name for s in canonical_order(specs)]
+    assert base == [s.name for s in canonical_order(specs[::-1])]
+    assert set(base) == {s.name for s in specs}
+
+
+def test_dispatch_rejects_undispatched_dep_and_redispatch():
+    run = DagRun(SimClock(MODEL), key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="undispatched"):
+        run.dispatch(PhaseSpec("b", 2, deps=("a",)))
+    run.dispatch(PhaseSpec("a", 2))
+    with pytest.raises(ValueError, match="already dispatched"):
+        run.dispatch(PhaseSpec("a", 2))
+
+
+# ------------------------------------------------------------ determinism
+def test_topological_declaration_orders_bit_identical():
+    specs = _diamond()
+    totals = set()
+    # Three distinct topological declaration orders of the same DAG.
+    for perm in ([0, 1, 2, 3], [2, 0, 1, 3], [0, 2, 1, 3]):
+        clock = SimClock(MODEL)
+        run_dag(clock, jax.random.PRNGKey(0), [specs[i] for i in perm])
+        totals.add((clock.time, clock.dollars))
+    assert len(totals) == 1
+
+
+def test_topological_orders_bit_identical_with_pool():
+    specs = _diamond()
+    totals = set()
+    for perm in ([0, 1, 2, 3], [2, 0, 1, 3]):
+        pool = WarmPool(ttl=5.0)
+        clock = SimClock(MODEL, fleet=FleetConfig(), pool=pool)
+        run_dag(clock, jax.random.PRNGKey(0), [specs[i] for i in perm])
+        totals.add((clock.time, clock.dollars,
+                    pool.warm_hits, pool.cold_starts))
+    assert len(totals) == 1
+
+
+# ------------------------------------------------------ makespan dominance
+def test_dag_beats_sequential_on_diamond_and_bills_identically():
+    specs = _diamond()
+    dag_clock, seq_clock = SimClock(MODEL), SimClock(MODEL)
+    run_dag(dag_clock, jax.random.PRNGKey(0), specs)
+    run_dag(seq_clock, jax.random.PRNGKey(0), specs, sequential=True)
+    assert dag_clock.time < seq_clock.time
+    assert dag_clock.dollars == seq_clock.dollars
+
+
+def test_chain_dag_bit_identical_to_sequential():
+    chain = [PhaseSpec("a", 6, flops_per_worker=2e5),
+             PhaseSpec("b", 6, flops_per_worker=2e5, deps=("a",)),
+             PhaseSpec("c", 6, flops_per_worker=2e5, deps=("b",))]
+    c1, c2 = SimClock(MODEL), SimClock(MODEL)
+    run_dag(c1, jax.random.PRNGKey(3), chain)
+    run_dag(c2, jax.random.PRNGKey(3), chain, sequential=True)
+    assert c1.time == c2.time
+    assert c1.dollars == c2.dollars
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_random_dag_makespan_never_exceeds_sequential(data):
+    """Random DAGs: edges drawn per-phase from earlier phases; DAG makespan
+    <= sequential (ULP slack for overlap re-rounding), dollars identical."""
+    n = data.draw(st.integers(min_value=2, max_value=6), label="phases")
+    specs = []
+    for i in range(n):
+        deps = tuple(
+            f"p{j}" for j in range(i)
+            if data.draw(st.booleans(), label=f"edge {j}->{i}"))
+        specs.append(PhaseSpec(
+            f"p{i}",
+            workers=data.draw(st.integers(min_value=2, max_value=8),
+                              label=f"workers {i}"),
+            flops_per_worker=1e5 * data.draw(
+                st.integers(min_value=1, max_value=5), label=f"work {i}"),
+            comm_units=1.0, deps=deps))
+    seed = data.draw(st.integers(min_value=0, max_value=2 ** 16),
+                     label="seed")
+    dag_clock, seq_clock = SimClock(MODEL), SimClock(MODEL)
+    run_dag(dag_clock, jax.random.PRNGKey(seed), specs)
+    run_dag(seq_clock, jax.random.PRNGKey(seed), specs, sequential=True)
+    assert dag_clock.time <= seq_clock.time * (1 + 1e-12)
+    assert dag_clock.dollars == seq_clock.dollars
+
+
+# --------------------------------------------------------------- warm pool
+def test_pool_reuse_and_ttl_expiry():
+    pool = WarmPool(ttl=10.0)
+    assert not pool.acquire(0.0)          # empty: cold
+    pool.release(1.0)
+    assert not pool.acquire(0.5)          # not free yet at t=0.5
+    pool.release(2.0)
+    assert pool.acquire(5.0)              # MRU: takes the t=2.0 container
+    assert pool.acquire(10.5)             # t=1.0 container, idle 9.5 < ttl
+    assert not pool.acquire(10.6)         # pool drained
+    pool.release(3.0)
+    assert not pool.acquire(20.0)         # idle 17 s > ttl: expired
+
+
+def test_pool_mru_keeps_hot_container_capacity_evicts_lru():
+    pool = WarmPool(ttl=100.0, capacity=2)
+    for t in (1.0, 2.0, 3.0):
+        pool.release(t)
+    assert len(pool) == 2                 # t=1.0 evicted
+    assert pool.free_at(3.5) == 2
+    assert pool.acquire(3.5)
+    assert pool.free_at(3.5) == 1
+
+
+def test_prewarmed_pool_skips_initial_colds():
+    pool = WarmPool(ttl=100.0, prewarmed=4)
+    clock = SimClock(MODEL, pool=pool)
+    clock.phase(jax.random.PRNGKey(0), 4, flops_per_worker=1e5)
+    assert pool.cold_starts == 0
+    assert pool.warm_hits == 4
+
+
+def test_bursty_dag_pays_at_least_as_many_colds_as_steady_sequential():
+    specs = _diamond()
+    cold = {}
+    for label, sequential in (("dag", False), ("seq", True)):
+        pool = WarmPool(ttl=300.0)
+        clock = SimClock(MODEL, fleet=FleetConfig(), pool=pool)
+        run_dag(clock, jax.random.PRNGKey(2), specs, sequential=sequential)
+        cold[label] = pool.cold_starts
+    # The DAG launches gx and hess concurrently: no warm containers can be
+    # shared between them, so the burst pays strictly more cold starts.
+    assert cold["dag"] > cold["seq"]
+
+
+def test_pool_cold_starts_slow_the_phase():
+    def run(pool):
+        clock = SimClock(StragglerModel(p_tail=0.0),
+                         fleet=FleetConfig(cold_start_lo=1.0,
+                                           cold_start_hi=2.0),
+                         pool=pool)
+        elapsed, _ = clock.phase(jax.random.PRNGKey(5), 8,
+                                 flops_per_worker=1e5)
+        return elapsed
+    cold_elapsed = run(WarmPool(ttl=50.0))             # empty pool: all cold
+    warm_elapsed = run(WarmPool(ttl=50.0, prewarmed=8))
+    assert cold_elapsed > warm_elapsed + 0.9           # >= cold_start_lo
+
+
+# ------------------------------------------------- per-phase memory sizing
+def test_lambda_memory_gb_granularity_and_clamps():
+    assert lambda_memory_gb(0.0) == 0.125
+    assert lambda_memory_gb(2 ** 30, headroom=1.0) == 1.0
+    assert lambda_memory_gb(2 ** 30 + 1, headroom=1.0) == 1.0625
+    assert lambda_memory_gb(2 ** 40) == 10.0
+    with pytest.raises(ValueError):
+        lambda_memory_gb(-1.0)
+
+
+def test_memory_override_bills_proportionally():
+    def gb_seconds(mem):
+        clock = SimClock(StragglerModel())
+        clock.phase(jax.random.PRNGKey(1), 8, flops_per_worker=2e5,
+                    memory_gb=mem)
+        return clock.ledger.gb_seconds
+    assert np.isclose(gb_seconds(1.0) * 3.0, gb_seconds(None))
+    assert np.isclose(gb_seconds(0.5) * 6.0, gb_seconds(None))
+
+
+def test_memory_override_respected_by_reserved_billing():
+    from repro.runtime import CostModel
+    clock = SimClock(StragglerModel(), cost=CostModel(billing="reserved"))
+    elapsed, _ = clock.phase(jax.random.PRNGKey(1), 4,
+                             flops_per_worker=2e5, memory_gb=1.0)
+    assert np.isclose(clock.ledger.gb_seconds, 1.0 * 4 * elapsed)
+
+
+# ------------------------------------------------------- trace schema v2
+def test_dag_pool_memory_trace_replays_bit_identical(tmp_path):
+    def drive(clock):
+        run_dag(clock, jax.random.PRNGKey(4), [
+            PhaseSpec("a", 8, flops_per_worker=2e5, memory_gb=1.5),
+            PhaseSpec("b", 8, flops_per_worker=2e5, deps=("a",)),
+            PhaseSpec("c", 12, policy="k_of_n", k=10,
+                      flops_per_worker=3e5, memory_gb=0.5),
+        ])
+        return clock
+    rec = TraceRecorder(worker_times=True, lifecycle=True)
+    live = drive(SimClock(MODEL, fleet=FleetConfig(failure_rate=0.1),
+                          pool=WarmPool(ttl=30.0), recorder=rec))
+    path = tmp_path / "dag.jsonl"
+    rec.dump(path)
+    rows = [json.loads(line) for line in path.read_text().splitlines()]
+    assert any(r.get("memory_gb") == 1.5 for r in rows)
+    assert all("pool" in r for r in rows)
+    assert all("retries" in r and "cold_delays" in r for r in rows)
+    replayed = drive(SimClock(MODEL, replay=load_trace(path)))
+    assert replayed.time == live.time
+    assert replayed.dollars == live.dollars
+
+
+def test_default_recording_has_no_v2_fields():
+    """Runs without pool/memory/lifecycle opt-ins must record byte-level
+    v1 rows — pre-v2 consumers and fixtures stay untouched."""
+    rec = TraceRecorder()
+    clock = SimClock(MODEL, recorder=rec)
+    clock.phase(jax.random.PRNGKey(0), 6, flops_per_worker=1e5)
+    (row,) = rec.rows
+    for field in ("memory_gb", "pool", "retries", "cold_delays"):
+        assert field not in row
+
+
+# ------------------------------------------------------- optimizer wiring
+def test_newton_dag_same_iterates_faster_makespan_equal_dollars():
+    obj, data, w0 = _logistic()
+    scfg = sketch.OverSketchConfig(sketch_dim=256, block_size=64,
+                                   straggler_tolerance=0.25)
+    cfg = newton.NewtonConfig(iters=3, sketch=scfg, schedule="dag")
+    res_dag = newton.oversketched_newton(obj, data, w0, cfg, model=MODEL)
+    res_seq = newton.oversketched_newton(
+        obj, data, w0, dataclasses.replace(cfg, schedule="sequential"),
+        model=MODEL)
+    assert res_dag.history["fval"] == res_seq.history["fval"]
+    assert res_dag.history["time"][-1] < res_seq.history["time"][-1]
+    assert res_dag.history["cost"] == res_seq.history["cost"]
+
+
+def test_newton_distavg_dag_overlaps_and_matches_iterates():
+    obj, data, w0 = _logistic()
+    scfg = sketch.OverSketchConfig(sketch_dim=128, block_size=32,
+                                   straggler_tolerance=0.25)
+    cfg = newton.NewtonConfig(iters=3, sketch=scfg,
+                              sketch_mode="distributed-avg", debias=True,
+                              schedule="dag")
+    res_dag = newton.oversketched_newton(obj, data, w0, cfg, model=MODEL)
+    res_seq = newton.oversketched_newton(
+        obj, data, w0, dataclasses.replace(cfg, schedule="sequential"),
+        model=MODEL)
+    assert res_dag.history["fval"] == res_seq.history["fval"]
+    assert res_dag.history["time"][-1] < res_seq.history["time"][-1]
+
+
+def test_newton_phase_memory_cheaper_than_fleet_wide_3gb():
+    obj, data, w0 = _logistic()
+    scfg = sketch.OverSketchConfig(sketch_dim=256, block_size=64,
+                                   straggler_tolerance=0.25)
+    cfg = newton.NewtonConfig(iters=2, sketch=scfg)
+    sized = dataclasses.replace(cfg, phase_memory=True)
+    res = newton.oversketched_newton(obj, data, w0, cfg, model=MODEL)
+    res_sized = newton.oversketched_newton(obj, data, w0, sized, model=MODEL)
+    assert res_sized.history["cost"][-1] < res.history["cost"][-1]
+    assert res_sized.history["fval"] == res.history["fval"]
+
+
+def test_newton_dag_trace_record_replay_round_trip(tmp_path):
+    obj, data, w0 = _logistic()
+    cfg = newton.NewtonConfig(
+        iters=2, schedule="dag",
+        sketch=sketch.OverSketchConfig(sketch_dim=128, block_size=32,
+                                       straggler_tolerance=0.25))
+    rec = TraceRecorder()
+    clock = SimClock(MODEL, pool=WarmPool(ttl=60.0),
+                     fleet=FleetConfig(), recorder=rec)
+    live = newton.oversketched_newton(obj, data, w0, cfg, model=clock)
+    path = tmp_path / "newton_dag.jsonl"
+    rec.dump(path)
+    replay_clock = SimClock(MODEL, replay=load_trace(path))
+    replayed = newton.oversketched_newton(obj, data, w0, cfg,
+                                          model=replay_clock)
+    assert replayed.history["time"] == live.history["time"]
+    assert replayed.history["cost"] == live.history["cost"]
+
+
+def test_giant_dag_chain_bit_equal_to_sequential():
+    obj, data, w0 = _logistic()
+    cfg = GiantConfig(iters=2, num_workers=8, schedule="dag")
+    h_dag = giant(obj, data, w0, cfg, model=MODEL)
+    h_seq = giant(obj, data, w0,
+                  dataclasses.replace(cfg, schedule="sequential"),
+                  model=MODEL)
+    assert h_dag["time"] == h_seq["time"]
+    assert h_dag["cost"] == h_seq["cost"]
+    assert h_dag["fval"] == h_seq["fval"]
+
+
+def test_newton_rejects_bad_schedule_and_metric():
+    obj, data, w0 = _logistic()
+    with pytest.raises(ValueError, match="schedule"):
+        newton.oversketched_newton(
+            obj, data, w0, newton.NewtonConfig(iters=1, schedule="zigzag"),
+            model=None)
+    with pytest.raises(ValueError, match="adaptive_metric"):
+        newton.oversketched_newton(
+            obj, data, w0,
+            newton.NewtonConfig(iters=1, adaptive_metric="psychic"),
+            model=None)
+    with pytest.raises(ValueError, match="blocks"):
+        newton.oversketched_newton(
+            obj, data, w0,
+            newton.NewtonConfig(iters=1, adaptive_sketch=True,
+                                adaptive_metric="mp",
+                                sketch_mode="distributed-avg"),
+            model=None)
+    # The exact-Hessian path never reports m_eff: the mp metric would be
+    # silently inert, so it must be rejected just like distributed-avg.
+    with pytest.raises(ValueError, match="oversketch"):
+        newton.oversketched_newton(
+            obj, data, w0,
+            newton.NewtonConfig(iters=1, adaptive_sketch=True,
+                                adaptive_metric="mp",
+                                hessian_policy="exact"),
+            model=None)
+
+
+# ------------------------------------------------ MP-driven adaptive sketch
+def test_mp_metric_grows_from_iteration_zero():
+    """gamma = 1 - d/m starts below target => growth fires immediately,
+    before any f-decrease stall is observable."""
+    obj, data, w0 = _logistic()
+    scfg = sketch.OverSketchConfig(sketch_dim=32, block_size=16,
+                                   straggler_tolerance=0.25)
+    cfg = newton.NewtonConfig(iters=3, sketch=scfg, adaptive_sketch=True,
+                              adaptive_metric="mp", adaptive_mp_target=0.75)
+    res = newton.oversketched_newton(obj, data, w0, cfg, model=MODEL)
+    dims = res.history["sketch_dim"]
+    assert dims[1] == 2 * dims[0]
+    stall = dataclasses.replace(cfg, adaptive_metric="stall")
+    res_stall = newton.oversketched_newton(obj, data, w0, stall, model=MODEL)
+    # The stall heuristic cannot grow before iteration 2 (needs prev_f).
+    assert res_stall.history["sketch_dim"][1] == dims[0]
+
+
+def test_mp_metric_leaves_ample_sketch_alone():
+    obj, data, w0 = _logistic()
+    scfg = sketch.OverSketchConfig(sketch_dim=256, block_size=64,
+                                   straggler_tolerance=0.25)
+    cfg = newton.NewtonConfig(iters=3, sketch=scfg, adaptive_sketch=True,
+                              adaptive_metric="mp", adaptive_mp_target=0.75)
+    res = newton.oversketched_newton(obj, data, w0, cfg, model=MODEL)
+    assert res.history["sketch_dim"] == [256, 256, 256]
+
+
+def test_mp_helpers():
+    from repro import sketching
+    assert sketching.mp_stalled(16, 32, target=0.75)          # gamma = 0.5
+    assert not sketching.mp_stalled(16, 256, target=0.75)     # gamma ~ 0.94
+    assert sketching.rows_for_target(16, 0.75) == 64
+    with pytest.raises(ValueError):
+        sketching.rows_for_target(16, 1.5)
+
+
+# ------------------------------------------------------- fleet calibration
+def test_lambda_fixture_round_trips_fleet_config():
+    fleet = calibrate_fleet_from_trace(LAMBDA_FIXTURE)
+    assert abs(fleet.failure_rate - LAMBDA_FLEET.failure_rate) < 0.05
+    assert abs(fleet.cold_start_prob - LAMBDA_FLEET.cold_start_prob) < 0.05
+    assert abs(fleet.cold_start_lo - LAMBDA_FLEET.cold_start_lo) < 0.1
+    assert abs(fleet.cold_start_hi - LAMBDA_FLEET.cold_start_hi) < 0.1
+
+
+def test_lambda_fixture_straggler_shape_still_calibrates():
+    from repro.runtime import calibrate_from_trace
+    model = calibrate_from_trace(LAMBDA_FIXTURE)
+    assert model.base_time > 0
+    assert 0.0 <= model.p_tail <= 1.0
+
+
+def test_calibrate_fleet_requires_lifecycle_rows(tmp_path):
+    rec = TraceRecorder()          # no lifecycle opt-in
+    clock = SimClock(MODEL, recorder=rec)
+    clock.phase(jax.random.PRNGKey(0), 4, flops_per_worker=1e5)
+    path = tmp_path / "v1.jsonl"
+    rec.dump(path)
+    with pytest.raises(ValueError, match="lifecycle"):
+        calibrate_fleet_from_trace(path)
+
+
+# ----------------------------------------------------------------- fixture
+def _regen_lambda():
+    """Record the synthetic "public" Lambda trace: 40 mixed phases under a
+    KNOWN fleet (LAMBDA_FLEET) with lifecycle + worker-time recording —
+    the stand-in for the real public trace the ROADMAP calibration item
+    wants, with ground truth attached."""
+    rec = TraceRecorder(worker_times=True, lifecycle=True)
+    clock = SimClock(StragglerModel(base_time=2.0, p_tail=0.04,
+                                    tail_hi=2.0),
+                     fleet=LAMBDA_FLEET, recorder=rec)
+    for i in range(40):
+        workers = (16, 32, 48)[i % 3]
+        clock.phase(jax.random.PRNGKey(1000 + i), workers,
+                    policy=("wait_all", "k_of_n")[i % 2],
+                    k=max(1, int(0.9 * workers)) if i % 2 else None,
+                    flops_per_worker=2e5 * (1 + i % 4), comm_units=1.0)
+    LAMBDA_FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+    with open(LAMBDA_FIXTURE, "w") as f:
+        f.write(json.dumps(
+            {"kind": "meta", "jax_version": jax.__version__,
+             "generator": "tests/test_scheduler.py --regen-lambda",
+             "fleet": {"failure_rate": LAMBDA_FLEET.failure_rate,
+                       "cold_start_prob": LAMBDA_FLEET.cold_start_prob,
+                       "cold_start_lo": LAMBDA_FLEET.cold_start_lo,
+                       "cold_start_hi": LAMBDA_FLEET.cold_start_hi}}) + "\n")
+        for row in rec.rows:
+            f.write(json.dumps(row) + "\n")
+    print(f"wrote {LAMBDA_FIXTURE} ({len(rec.rows)} rows)")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen-lambda" in sys.argv:
+        _regen_lambda()
+    else:
+        sys.exit("usage: python tests/test_scheduler.py --regen-lambda")
