@@ -9,11 +9,13 @@ One extra row self-checks trace record/replay bit-exactness.
 from __future__ import annotations
 
 import os
+import sys
 import tempfile
 
 import jax
 
 from benchmarks.common import json_row
+from repro import obs
 from repro.core.straggler import SimClock, StragglerModel
 from repro.runtime import (FleetConfig, TraceRecorder, available_policies,
                            load_trace)
@@ -66,4 +68,5 @@ def run(quick: bool = True):
     rows.append(json_row("fleet_trace_replay", recorded.time * 1e6,
                          sim_s=recorded.time, usd=recorded.dollars,
                          replay_exact=exact))
+    print(obs.bench_rows_table(rows), file=sys.stderr)
     return rows

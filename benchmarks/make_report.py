@@ -1,7 +1,14 @@
-"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from sweep JSONs.
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from sweep JSONs,
+or render telemetry tables from an obs JSONL export.
 
   PYTHONPATH=src python -m benchmarks.make_report \
       --single sweep_single_pod.json --multi sweep_multi_pod.json
+  PYTHONPATH=src python -m benchmarks.make_report --trace run.perfetto.jsonl
+
+``--trace`` takes the JSONL sibling that ``benchmarks.run --trace-out``
+writes next to the Perfetto file, and renders the per-phase time/dollar
+breakdown plus a critical-path/slack table per recorded iteration DAG
+(via ``repro.obs``; same formatter the benchmark summaries share).
 """
 from __future__ import annotations
 
@@ -66,12 +73,39 @@ def summarize(cells):
     return ok, skip, fail
 
 
+def trace_report(rows):
+    """Per-phase breakdown + per-DAG critical-path tables from obs rows."""
+    from repro import obs
+    out = ["### Per-phase breakdown\n", obs.phase_table(rows)]
+    reports = obs.dag_reports_from_rows(rows)
+    for i, rep in enumerate(reports):
+        out.append(f"\n### Iteration DAG {i}: critical path\n")
+        out.append(obs.critical_path_table(rep))
+    if not reports:
+        out.append("\n(no DAG-dispatched phases with recorded deps)")
+    return "\n".join(out)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--single", type=str, required=True)
+    ap.add_argument("--single", type=str, default=None)
     ap.add_argument("--multi", type=str, default=None)
+    ap.add_argument("--trace", type=str, default=None,
+                    help="obs JSONL export (from benchmarks.run --trace-out)")
     ap.add_argument("--out", type=str, default=None)
     args = ap.parse_args(argv)
+    if bool(args.single) == bool(args.trace):
+        ap.error("pass exactly one of --single / --trace")
+
+    if args.trace:
+        from repro import obs
+        text = trace_report(obs.load_jsonl(args.trace))
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text)
+        else:
+            print(text)
+        return 0
 
     with open(args.single) as f:
         single = json.load(f)

@@ -14,6 +14,7 @@ regressions have a baseline to diff against (see kernels/README.md).
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import pathlib
 import sys
@@ -49,6 +50,10 @@ def main(argv=None) -> int:
                     help="larger problem sizes (slower)")
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated module prefixes")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write a Perfetto trace of an instrumented run "
+                         "here (modules whose run() accepts trace_out; "
+                         "a .jsonl sibling feeds make_report --trace)")
     args = ap.parse_args(argv)
 
     mods = MODULES
@@ -61,8 +66,12 @@ def main(argv=None) -> int:
     for mod_name in mods:
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
         t0 = time.time()
+        kwargs = {}
+        if args.trace_out and \
+                "trace_out" in inspect.signature(mod.run).parameters:
+            kwargs["trace_out"] = args.trace_out
         try:
-            rows = mod.run(quick=not args.full)
+            rows = mod.run(quick=not args.full, **kwargs)
         except Exception as e:   # noqa: BLE001 — surface and continue
             print(f"{mod_name},NaN,ERROR:{type(e).__name__}:{e}",
                   file=sys.stderr)

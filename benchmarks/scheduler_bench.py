@@ -27,12 +27,14 @@ baseline's attribution convention.
 from __future__ import annotations
 
 import os
+import sys
 import tempfile
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import json_row
+from repro import obs
 from repro.core.straggler import SimClock, StragglerModel
 from repro.runtime import TraceRecorder, load_trace
 from repro.scheduler import PhaseSpec, WarmPool, lambda_memory_gb, run_dag
@@ -76,9 +78,7 @@ def _run(specs, *, sequential=False, pool=None, recorder=None, replay=None
     return clock
 
 
-def _newton_end_to_end(schedule: str, iters: int):
-    import dataclasses
-
+def _newton_end_to_end(schedule: str, iters: int, telemetry=None):
     from repro.core import newton, sketch
     from repro.core.objectives import Dataset, LogisticRegression
 
@@ -89,13 +89,41 @@ def _newton_end_to_end(schedule: str, iters: int):
         iters=iters, schedule=schedule,
         sketch=sketch.OverSketchConfig(sketch_dim=256, block_size=64,
                                        straggler_tolerance=0.25))
+    model = (SimClock(MODEL, telemetry=telemetry)
+             if telemetry is not None else MODEL)
     res = newton.oversketched_newton(
         LogisticRegression(), Dataset(x=x, y=y), jnp.zeros(16), cfg,
-        model=MODEL)
+        model=model)
     return res.history["time"][-1], res.history["cost"][-1]
 
 
-def run(quick: bool = True):
+def _traced_newton_row(trace_out: str, iters: int):
+    """The ``--trace-out`` path: re-run the DAG-scheduled Newton with live
+    telemetry, export + validate a Perfetto trace (gradient chain ||
+    Hessian-sketch overlap with per-worker lifecycle slices), dump the
+    JSONL sibling for ``benchmarks.make_report --trace``, and self-check
+    that attaching the recorder changed nothing."""
+    t_plain, c_plain = _newton_end_to_end("dag", iters)
+    tel = obs.Telemetry()
+    t_dag, c_dag = _newton_end_to_end("dag", iters, telemetry=tel)
+    trace = obs.to_perfetto(tel.trace.spans)
+    obs.perfetto.validate_trace(
+        trace, require_phases=("hessian", "linesearch", "grad/0:X"))
+    obs.dump_perfetto(trace, trace_out)
+    jsonl = (trace_out[:-5] if trace_out.endswith(".json") else trace_out) \
+        + ".jsonl"
+    obs.dump_jsonl(tel, jsonl)
+    print(f"# wrote {trace_out} + {jsonl}", file=sys.stderr)
+    print(obs.phase_table(obs.telemetry_rows(tel)), file=sys.stderr)
+    return json_row(
+        "sched_newton_traced", t_dag * 1e6, sim_s=t_dag, usd=c_dag,
+        spans=len(tel.trace.spans),
+        events=len(trace["traceEvents"]),
+        recorder_inert=int(t_dag == t_plain and c_dag == c_plain)) \
+        | {"path": "dag"}
+
+
+def run(quick: bool = True, trace_out=None):
     rows = []
     sizes = (16, 64) if quick else (16, 64, 256)
 
@@ -169,4 +197,9 @@ def run(quick: bool = True):
     rows.append(json_row("sched_trace_replay", recorded.time * 1e6,
                          sim_s=recorded.time, usd=recorded.dollars,
                          replay_exact=exact) | {"path": "replay"})
+
+    # --- 6. telemetry export (opt-in via --trace-out) -----------------
+    if trace_out:
+        rows.append(_traced_newton_row(trace_out, iters))
+    print(obs.bench_rows_table(rows), file=sys.stderr)
     return rows

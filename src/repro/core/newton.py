@@ -33,7 +33,12 @@ import numpy as np
 
 from repro.core import coded, linesearch, sketch, solvers, straggler
 from repro.core.objectives import Dataset
-from repro import scheduler, sketching
+from repro import obs, scheduler, sketching
+
+
+def _telemetry(clock) -> "obs.Telemetry":
+    """The clock's attached telemetry, or the zero-overhead no-op."""
+    return clock.telemetry if clock is not None else obs.NULL
 
 
 def _decodable(erased_grid: "np.ndarray") -> bool:
@@ -209,7 +214,7 @@ class CodedMatvecEngine:
             return clock.phase(k, w, policy=policy, k=kk,
                                flops_per_worker=flops,
                                comm_units=comm_units, decodable=decodable,
-                               memory_gb=mem)
+                               memory_gb=mem, phase_name=name or tag)
         if self.model is not None and tag in self._encode_pending:
             # One-time product-code encode of this operand, billed on
             # first use.  Both encodes launch when the engine comes up
@@ -228,7 +233,8 @@ class CodedMatvecEngine:
                 nb = None
             clock.phase(jax.random.fold_in(key, 555), w, policy="wait_all",
                         flops_per_worker=enc_flops, comm_units=1.0,
-                        not_before=nb, memory_gb=mem)
+                        not_before=nb, memory_gb=mem,
+                        phase_name=f"encode:{tag}")
             # After this call the clock sits at (at least) the encode's
             # finish — the earliest instant this operand can be consumed.
             enc_floor["t"] = clock.time
@@ -259,6 +265,8 @@ class CodedMatvecEngine:
             self.fallbacks += 1
             y, _ = self._mv(tag, v, None)
             if self.model is not None:
+                _telemetry(clock).metrics.counter(
+                    "coded.decode_fallbacks").inc()
                 kf = jax.random.fold_in(key, 1)
                 if dag is not None:
                     dag.dispatch(scheduler.PhaseSpec(
@@ -267,7 +275,8 @@ class CodedMatvecEngine:
                         deps=((name or tag),)), key=kf)
                 else:
                     clock.phase(kf, w, policy="wait_all", comm_units=1.0,
-                                memory_gb=mem)
+                                memory_gb=mem,
+                                phase_name=(name or tag) + "/retry")
         return y
 
 
@@ -300,7 +309,13 @@ def _jitted_sketched_hessian(objective, family: "sketching.SketchFamily",
     d-tiles its output grid, so oversketch/srht/sjlt take the fused path
     for EVERY d (``SketchFamily.fused_path(d)`` reports "fused" vs
     "fused_tiled"); families without an encode-matrix form fall back to
-    the two-kernel apply+gram chain ("unfused")."""
+    the two-kernel apply+gram chain ("unfused").
+
+    The path actually taken is logged as a telemetry metric
+    (``kernel.path.<fused|fused_tiled|unfused>``) at this function's call
+    site in ``_hessian_phase`` — inside the jitted closure there is no
+    Python left to log from — so production path selection is auditable
+    against the ``BENCH_kernels.json`` per-row ``path`` field."""
     def fn(w, data, state, survivors):
         a = objective.hess_sqrt(w, data)
         d = a.shape[1]
@@ -395,7 +410,7 @@ def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
                 memory_gb=mem), key=key).mask
         _, mask = clock.phase(key, workers, policy=policy, k=k,
                               flops_per_worker=flops, comm_units=comm,
-                              memory_gb=mem)
+                              memory_gb=mem, phase_name=tag)
         return mask
 
     if cfg.hessian_policy == "oversketch":
@@ -414,9 +429,21 @@ def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
                             flops=fam.block_flops(n_rows, d),
                             comm=fam.comm_units(d) * total_workers, mem=mem)
         state = fam.sample(jax.random.fold_in(key, 7), n_rows)
+        tel = _telemetry(clock)
+        if tel.enabled:
+            # Audit trail for kernel auto-routing: the path the fused
+            # sketch->Gram dispatch ACTUALLY takes for this (family, d),
+            # comparable against BENCH_kernels.json rows instead of
+            # assumed from the config.
+            path = fam.fused_path(d) if cfg.use_kernels else "unfused"
+            tel.metrics.counter(f"kernel.path.{path}").inc()
         fn = _jitted_sketched_hessian(objective, fam, cfg.use_kernels)
         h_hat = fn(w, data, state, survivors)
         m_eff = float(jnp.sum(survivors)) * scfg.block_size
+        if tel.enabled:
+            tel.metrics.gauge("sketch.m_eff").set(m_eff)
+            tel.metrics.gauge("sketch.mp_debias").set(
+                max(0.0, 1.0 - d / m_eff) if m_eff > 0 else 0.0)
         return h_hat, m_eff
     # exact Hessian (paper's "exact Newton" baseline)
     block_flops = 2.0 * b * min(d, b) ** 2    # one (b x d_tile) gram block
@@ -489,7 +516,7 @@ def _distavg_direction_phase(objective, data: Dataset, w: jax.Array,
                                   flops_per_worker=(apply_flops + gram_flops
                                                     + solve_flops),
                                   comm_units=0.01 * scfg.total_blocks,
-                                  memory_gb=mem)
+                                  memory_gb=mem, phase_name=tag)
             survivors = mask
     state = fam.sample(jax.random.fold_in(key, 7), n_rows)
     fn = _jitted_distavg_direction(objective, fam, cfg.debias,
@@ -559,9 +586,20 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
     prev_f = None
     prev_decrease = None
 
+    tel = _telemetry(clock)
+    run_span = tel.trace.begin(
+        "newton", "run", clock.time if clock is not None else 0.0,
+        sketch_family=cfg.sketch_family, schedule=cfg.schedule,
+        sketch_mode=cfg.sketch_mode)
+    if tel.enabled and cfg.solver in ("cg", "minres"):
+        tel.metrics.gauge("newton.cg_iters").set(cfg.cg_iters)
+
     for t in range(cfg.iters):
         cfg = live_cfg
         key, kg, kh, kl = jax.random.split(key, 4)
+        it_span = tel.trace.begin(
+            f"iter{t}", "iteration",
+            clock.time if clock is not None else float(t))
         # One iteration = one phase DAG: gradient matvecs chain through
         # dependency edges, the Hessian sketch is a root node launched at
         # the iteration start (concurrent with the gradient), the line
@@ -633,15 +671,19 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
             if dag is not None:
                 # The line search consumes p, i.e. every phase so far; by
                 # then the clock already sits at the DAG's frontier, so it
-                # dispatches on the engine's exact sequential path.
+                # dispatches on the engine's exact sequential path.  The
+                # edges are still declared (sequential dispatch ignores
+                # them for timing) so the recorded DAG joins here and the
+                # critical-path walk can cross the line search.
                 dag.dispatch(scheduler.PhaseSpec(
                     name="linesearch", workers=nb, policy="wait_all",
                     flops_per_worker=ls_flops, comm_units=0.5,
-                    memory_gb=ls_mem), key=kl, sequential=True)
+                    memory_gb=ls_mem, deps=tuple(dag.results)),
+                    key=kl, sequential=True)
             else:
                 clock.phase(kl, nb, policy="wait_all",
                             flops_per_worker=ls_flops, comm_units=0.5,
-                            memory_gb=ls_mem)
+                            memory_gb=ls_mem, phase_name="linesearch")
 
         w = w + step * p
 
@@ -653,6 +695,22 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
         hist["time"].append(clock.time if clock is not None else float(t + 1))
         hist["cost"].append(clock.dollars if clock is not None else 0.0)
         hist["sketch_dim"].append(live_cfg.sketch.sketch_dim)
+
+        if tel.enabled:
+            tel.metrics.gauge("newton.sketch_dim").set(
+                live_cfg.sketch.sketch_dim)
+            if dag is not None and dag.results:
+                # Per-iteration critical-path + slack report (ROADMAP's
+                # DagResult analytics item), attached to the iteration
+                # span so exporters and make_report can render it.
+                rep = dag.critical_path()
+                tel.trace.set_attrs(
+                    it_span,
+                    critical_path=list(rep.critical_path),
+                    dag_makespan=rep.makespan,
+                    slack={n: p.slack for n, p in rep.phases.items()})
+        tel.trace.end(it_span,
+                      clock.time if clock is not None else float(t + 1))
 
         # --- adaptive sketch growth (paper Thm 3.2 remark) ------------------
         if cfg.adaptive_sketch:
@@ -680,6 +738,7 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
                     live_cfg.sketch,
                     sketch_dim=live_cfg.sketch.sketch_dim * 2)
                 live_cfg = dataclasses.replace(live_cfg, sketch=new_sketch)
+                tel.metrics.counter("newton.adaptive_growth").inc()
         if prev_f is not None:
             prev_decrease = prev_f - f_now
         prev_f = f_now
@@ -689,4 +748,6 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
         else:
             hist["test_error"].append(float("nan"))
 
+    tel.trace.end(run_span,
+                  clock.time if clock is not None else float(cfg.iters))
     return NewtonResult(w=w, history=hist)

@@ -120,11 +120,11 @@ class SimClock:
 
     def __init__(self, model: StragglerModel, time: float = 0.0, *,
                  fleet=None, cost=None, recorder=None, replay=None,
-                 pool=None):
+                 pool=None, telemetry=None):
         from repro.runtime import FleetEngine   # lazy: runtime imports us
         self.engine = FleetEngine(model, fleet=fleet, cost=cost,
                                   recorder=recorder, replay=replay,
-                                  pool=pool)
+                                  pool=pool, telemetry=telemetry)
         if time:
             self.engine.seconds += float(time)
 
@@ -144,10 +144,15 @@ class SimClock:
     def ledger(self):
         return self.engine.ledger
 
-    def charge(self, elapsed: float) -> None:
+    @property
+    def telemetry(self):
+        """The attached ``obs.Telemetry`` (or the zero-overhead no-op)."""
+        return self.engine.telemetry
+
+    def charge(self, elapsed: float, phase_name=None) -> None:
         """Directly add externally-computed phase time (e.g. the coded
         master's wait-until-decodable simulation)."""
-        self.engine.charge(elapsed)
+        self.engine.charge(elapsed, phase_name=phase_name)
 
     def phase(self, key: jax.Array, num_workers: int, *,
               work_per_worker: float = 1.0,
@@ -156,15 +161,19 @@ class SimClock:
               comm_units: float = 0.0,
               decodable=None,
               not_before: Optional[float] = None,
-              memory_gb: Optional[float] = None) -> Tuple[float, jax.Array]:
+              memory_gb: Optional[float] = None,
+              phase_name: Optional[str] = None,
+              phase_deps: Tuple[str, ...] = ()) -> Tuple[float, jax.Array]:
         """Simulate one phase; returns (elapsed, finished_mask).
 
         ``not_before`` (absolute simulated seconds) overlaps this phase
         with whatever advanced the clock since that time; ``memory_gb``
-        bills it at its own Lambda size — see ``FleetEngine.run_phase``."""
+        bills it at its own Lambda size; ``phase_name``/``phase_deps``
+        label the phase's telemetry span — see ``FleetEngine.run_phase``."""
         elapsed, mask = self.engine.run_phase(
             key, num_workers, work_per_worker=work_per_worker,
             flops_per_worker=flops_per_worker, policy=policy, k=k,
             comm_units=comm_units, decodable=decodable,
-            not_before=not_before, memory_gb=memory_gb)
+            not_before=not_before, memory_gb=memory_gb,
+            phase_name=phase_name, phase_deps=phase_deps)
         return elapsed, jnp.asarray(mask)

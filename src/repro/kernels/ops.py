@@ -4,9 +4,19 @@ On TPU the kernels run compiled; on this CPU container they run in
 ``interpret=True`` mode (the Pallas interpreter executes the kernel body in
 Python), which is the validation path mandated by the target spec.  The
 backend is auto-detected; callers can force either mode.
+
+Profiling hooks: ``set_profiler(metrics_registry)`` attaches an
+``obs.MetricsRegistry`` to every entry point below — each call is then
+timed wall-clock (``kernel.<op>.us`` histogram + ``kernel.<op>.calls``
+counter, with ``block_until_ready`` so async dispatch does not hide the
+work).  This is the MEASURED per-backend latency table the ROADMAP's
+kernel auto-routing item consumes, replacing assumptions with data.  The
+default (no profiler) is a single ``is None`` check per call — numerics
+are never touched either way.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import jax
@@ -17,6 +27,31 @@ from repro.kernels import count_sketch as _cs
 from repro.kernels import oversketch_matmul as _og
 from repro.kernels import sketch_gram as _sg
 from repro.kernels import srht as _srht
+
+_PROFILER = None    # obs.MetricsRegistry while attached, else None
+
+
+def set_profiler(metrics) -> None:
+    """Attach (or with None detach) a metrics registry to all kernel entry
+    points; see the module docstring."""
+    global _PROFILER
+    _PROFILER = metrics
+
+
+def get_profiler():
+    return _PROFILER
+
+
+def _timed(op: str, fn, *args, **kwargs):
+    if _PROFILER is None:
+        return fn(*args, **kwargs)
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    out = jax.block_until_ready(out)
+    _PROFILER.histogram(f"kernel.{op}.us").observe(
+        (time.perf_counter() - t0) * 1e6)
+    _PROFILER.counter(f"kernel.{op}.calls").inc()
+    return out
 
 
 def _interpret(explicit: Optional[bool]) -> bool:
@@ -29,15 +64,16 @@ def count_sketch_apply(h: jax.Array, sigma: jax.Array, a: jax.Array,
                        block_size: int,
                        interpret: Optional[bool] = None) -> jax.Array:
     """S^T A for all K sketch blocks: (K,n),(K,n),(n,d) -> (K,b,d)."""
-    return _cs.count_sketch_apply(h, sigma, a, block_size,
-                                  interpret=_interpret(interpret))
+    return _timed("count_sketch_apply", _cs.count_sketch_apply,
+                  h, sigma, a, block_size,
+                  interpret=_interpret(interpret))
 
 
 def oversketch_gram(a_tilde: jax.Array, survivors: jax.Array,
                     interpret: Optional[bool] = None) -> jax.Array:
     """Masked Gram (K,b,d),(K,) -> (d,d), rescaled by survivor count."""
-    return _og.oversketch_gram(a_tilde, survivors,
-                               interpret=_interpret(interpret))
+    return _timed("oversketch_gram", _og.oversketch_gram,
+                  a_tilde, survivors, interpret=_interpret(interpret))
 
 
 def sketch_gram_count(h: jax.Array, sigma: jax.Array, a: jax.Array,
@@ -49,9 +85,10 @@ def sketch_gram_count(h: jax.Array, sigma: jax.Array, a: jax.Array,
     never hits HBM (streaming apply + in-register masked Gram).  The
     output is d-tiled past the VMEM budget (``d_tile`` defaults to
     ``pick_d_tile``; see ``fused_path`` for which grid a shape gets)."""
-    return _sg.sketch_gram_count(h, sigma, a, block_size, survivors,
-                                 tile_n=tile_n, d_tile=d_tile,
-                                 interpret=_interpret(interpret))
+    return _timed("sketch_gram_count", _sg.sketch_gram_count,
+                  h, sigma, a, block_size, survivors,
+                  tile_n=tile_n, d_tile=d_tile,
+                  interpret=_interpret(interpret))
 
 
 def sketch_gram_sjlt(h: jax.Array, sigma: jax.Array, a: jax.Array,
@@ -61,9 +98,10 @@ def sketch_gram_sjlt(h: jax.Array, sigma: jax.Array, a: jax.Array,
                      d_tile: Optional[int] = None) -> jax.Array:
     """Fused SJLT Gram (K,s,n),(K,s,n),(n,d),(K,) -> (d,d); the s signed
     one-hot layers are summed into the encode matrix in VMEM."""
-    return _sg.sketch_gram_sjlt(h, sigma, a, block_size, survivors,
-                                tile_n=tile_n, d_tile=d_tile,
-                                interpret=_interpret(interpret))
+    return _timed("sketch_gram_sjlt", _sg.sketch_gram_sjlt,
+                  h, sigma, a, block_size, survivors,
+                  tile_n=tile_n, d_tile=d_tile,
+                  interpret=_interpret(interpret))
 
 
 def sketch_gram_srht(rows: jax.Array, sigma: jax.Array, a: jax.Array,
@@ -73,9 +111,10 @@ def sketch_gram_srht(rows: jax.Array, sigma: jax.Array, a: jax.Array,
                      d_tile: Optional[int] = None) -> jax.Array:
     """Fused SRHT Gram (K,b),(K,n),(n,d),(K,) -> (d,d); the Hadamard mix
     rows are regenerated block-locally so the mixed panel never exists."""
-    return _sg.sketch_gram_srht(rows, sigma, a, survivors,
-                                tile_n=tile_n, d_tile=d_tile,
-                                interpret=_interpret(interpret))
+    return _timed("sketch_gram_srht", _sg.sketch_gram_srht,
+                  rows, sigma, a, survivors,
+                  tile_n=tile_n, d_tile=d_tile,
+                  interpret=_interpret(interpret))
 
 
 # Grid-choice helpers, re-exported for benchmarks and tests: which fused
@@ -88,17 +127,18 @@ pick_d_tile = _sg.pick_d_tile
 def fwht(x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
     """Orthonormal Walsh-Hadamard transform along axis 1 of (K, n, d).
     Dispatches monolithic-panel vs two-pass tiled on the VMEM budget."""
-    return _srht.fwht(x, interpret=_interpret(interpret))
+    return _timed("fwht", _srht.fwht, x, interpret=_interpret(interpret))
 
 
 def fwht_two_pass(x: jax.Array,
                   interpret: Optional[bool] = None) -> jax.Array:
     """Force the two-pass tiled FWHT (local + across Kronecker passes)."""
-    return _srht.fwht_two_pass(x, interpret=_interpret(interpret))
+    return _timed("fwht_two_pass", _srht.fwht_two_pass, x,
+                  interpret=_interpret(interpret))
 
 
 def coded_block_matvec(enc: jax.Array, x: jax.Array, erased: jax.Array,
                        interpret: Optional[bool] = None) -> jax.Array:
     """Masked coded block products (W,b,s),(s,),(W,) -> (W,b)."""
-    return _cmv.coded_block_matvec(enc, x, erased,
-                                   interpret=_interpret(interpret))
+    return _timed("coded_block_matvec", _cmv.coded_block_matvec,
+                  enc, x, erased, interpret=_interpret(interpret))

@@ -1,0 +1,71 @@
+"""Fleet telemetry: span tracing, metrics, Perfetto export, critical path.
+
+The observability layer for the simulated serverless stack.  One
+``Telemetry`` object bundles a hierarchical span tracer (run -> iteration
+-> DAG phase -> per-worker lifecycle attempt, all stamped on the
+*simulated* clock) with a metrics registry (counters / gauges /
+histograms); exporters render the result as a Perfetto-loadable Chrome
+trace, a JSONL dump, or summary tables.
+
+The default everywhere is ``obs.NULL`` — a zero-overhead no-op whose
+methods return immediately, draw no randomness, and read no clock, so
+attaching or detaching telemetry never changes a single simulated
+``(seconds, dollars)`` total (the golden-trace tests pin this).
+
+Attach points (see ``src/repro/obs/README.md`` for the span model and
+metric names):
+
+    tel = obs.Telemetry()
+    clock = SimClock(model, telemetry=tel)        # fleet + scheduler seams
+    res = oversketched_newton(obj, data, w0, cfg, model=clock)
+    obs.perfetto.dump(obs.to_perfetto(tel.trace.spans), "run.perfetto.json")
+    print(obs.phase_table(obs.telemetry_rows(tel)))
+"""
+from repro.obs.critical_path import (CriticalPathReport, PhaseSlack,
+                                     critical_path, from_dag)
+from repro.obs.export import (bench_rows_table, critical_path_table,
+                              dag_reports_from_rows, dump_jsonl, format_table,
+                              load_jsonl, phase_summary_rows, phase_table,
+                              telemetry_rows)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               NullMetrics)
+from repro.obs.perfetto import (dumps_stable, to_perfetto, validate_file,
+                                validate_trace)
+from repro.obs.perfetto import dump as dump_perfetto
+from repro.obs.span import NullTracer, Span, SpanTracer
+
+
+class Telemetry:
+    """A live tracer + metrics registry pair; pass to ``SimClock``."""
+
+    enabled = True
+
+    def __init__(self):
+        self.trace = SpanTracer()
+        self.metrics = MetricsRegistry()
+
+
+class _NullTelemetry:
+    """The zero-overhead default: both halves are no-ops."""
+
+    enabled = False
+
+    def __init__(self):
+        self.trace = NullTracer()
+        self.metrics = NullMetrics()
+
+
+NULL = _NullTelemetry()
+
+
+__all__ = [
+    "Telemetry", "NULL",
+    "Span", "SpanTracer", "NullTracer",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "NullMetrics",
+    "CriticalPathReport", "PhaseSlack", "critical_path", "from_dag",
+    "to_perfetto", "dumps_stable", "dump_perfetto", "validate_trace",
+    "validate_file",
+    "telemetry_rows", "dump_jsonl", "load_jsonl", "format_table",
+    "phase_table", "phase_summary_rows", "critical_path_table",
+    "dag_reports_from_rows", "bench_rows_table",
+]

@@ -1,0 +1,154 @@
+"""Metrics registry: counters, gauges, and histograms for fleet telemetry.
+
+Three instrument types, auto-created on first touch (``registry.counter
+("fleet.cold_starts").inc()``), mirroring the Prometheus surface every
+operator already knows:
+
+  - ``Counter`` — monotone totals: attempts, retries, cold starts, warm
+    hits, adaptive-sketch growth events, kernel-path selections.
+  - ``Gauge`` — last-value-wins with the full series kept: adaptive sketch
+    rows m, the measured Marchenko-Pastur debias factor, CG iteration
+    budget, warm-pool free containers.
+  - ``Histogram`` — full-sample distributions with exact percentiles (the
+    sample counts here are thousands, not millions — no bucketing error):
+    per-worker completion times (the Fig. 1 straggler tail), per-phase
+    elapsed seconds, GB-seconds, and dollars, kernel wall-clock.
+
+``NullMetrics`` is the zero-overhead default: every instrument lookup
+returns one shared no-op instance.  Like the tracer, the registry draws no
+randomness and reads no clock, so attaching it never perturbs a run.
+
+Metric names are dotted paths (``fleet.cold_starts``, ``phase.dollars``,
+``kernel.path.fused_tiled``); ``snapshot()`` returns them sorted, so the
+JSONL export is deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class Counter:
+    value: float = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += v
+
+
+@dataclasses.dataclass
+class Gauge:
+    """Last value wins; the series is kept for per-iteration plots."""
+
+    value: float = 0.0
+    series: List[float] = dataclasses.field(default_factory=list)
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+        self.series.append(self.value)
+
+
+@dataclasses.dataclass
+class Histogram:
+    values: List[float] = dataclasses.field(default_factory=list)
+
+    def observe(self, v: float) -> None:
+        self.values.append(float(v))
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    @property
+    def total(self) -> float:
+        return sum(self.values)
+
+    def percentile(self, q: float) -> float:
+        """Exact nearest-rank percentile, q in [0, 100]; NaN when empty."""
+        if not self.values:
+            return float("nan")
+        xs = sorted(self.values)
+        rank = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
+        return xs[rank]
+
+    def summary(self) -> dict:
+        return {"count": self.count, "sum": self.total,
+                "p50": self.percentile(50), "p90": self.percentile(90),
+                "p99": self.percentile(99),
+                "max": max(self.values) if self.values else float("nan")}
+
+
+class MetricsRegistry:
+    enabled = True
+
+    def __init__(self):
+        self.counters: Dict[str, Counter] = {}
+        self.gauges: Dict[str, Gauge] = {}
+        self.histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        return self.counters.setdefault(name, Counter())
+
+    def gauge(self, name: str) -> Gauge:
+        return self.gauges.setdefault(name, Gauge())
+
+    def histogram(self, name: str) -> Histogram:
+        return self.histograms.setdefault(name, Histogram())
+
+    def snapshot(self) -> dict:
+        """Deterministic (sorted-name) dump of every instrument."""
+        return {
+            "counters": {n: c.value
+                         for n, c in sorted(self.counters.items())},
+            "gauges": {n: {"value": g.value, "n": len(g.series)}
+                       for n, g in sorted(self.gauges.items())},
+            "histograms": {n: h.summary()
+                           for n, h in sorted(self.histograms.items())},
+        }
+
+
+class _NullInstrument:
+    """One shared instance behind every NullMetrics lookup."""
+
+    value = 0.0
+    values: List[float] = []
+    series: List[float] = []
+    count = 0
+    total = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        pass
+
+    def set(self, v: float) -> None:
+        pass
+
+    def observe(self, v: float) -> None:
+        pass
+
+    def percentile(self, q: float) -> float:
+        return float("nan")
+
+    def summary(self) -> dict:
+        return {}
+
+
+_NULL_INSTRUMENT = _NullInstrument()
+
+
+class NullMetrics:
+    enabled = False
+    counters: Dict[str, Counter] = {}
+    gauges: Dict[str, Gauge] = {}
+    histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> _NullInstrument:
+        return _NULL_INSTRUMENT
+
+    def gauge(self, name: str) -> _NullInstrument:
+        return _NULL_INSTRUMENT
+
+    def histogram(self, name: str) -> _NullInstrument:
+        return _NULL_INSTRUMENT
+
+    def snapshot(self) -> dict:
+        return {"counters": {}, "gauges": {}, "histograms": {}}

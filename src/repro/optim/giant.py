@@ -18,7 +18,7 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro import scheduler
+from repro import obs, scheduler
 from repro.core import solvers, straggler
 from repro.core.objectives import Dataset
 from repro.optim.gradient_coding import gradient_coding_phase
@@ -99,6 +99,13 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
         "iter", "fval", "gnorm", "step", "time", "cost", "test_error")}
     w = jnp.asarray(w0, jnp.float32)
 
+    tel = clock.telemetry if clock is not None else obs.NULL
+    run_span = tel.trace.begin(
+        "giant", "run", clock.time if clock is not None else 0.0,
+        policy=cfg.policy, workers=cfg.num_workers, schedule=cfg.schedule)
+    if tel.enabled:
+        tel.metrics.gauge("giant.cg_iters").set(cfg.cg_iters)
+
     grad_flops = 2.0 * per * d                    # local gradient pass
     # GIANT's local solves are CG / Hessian-free (Wang et al.): cg_iters
     # Hessian-vector products over the local shard per iteration.
@@ -108,6 +115,9 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
         scheduler.matvec_worker_bytes(per, d)) if cfg.phase_memory else None)
     for t in range(cfg.iters):
         key, k1, k2, k3 = jax.random.split(key, 4)
+        it_span = tel.trace.begin(
+            f"iter{t}", "iteration",
+            clock.time if clock is not None else float(t))
         dag = (scheduler.DagRun(clock)
                if cfg.schedule == "dag" and clock is not None else None)
 
@@ -125,7 +135,7 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
                     sequential=len(known) < len(deps)).mask
             _, mask = clock.phase(k, cfg.num_workers, policy=policy, k=kk,
                                   flops_per_worker=flops, comm_units=comm,
-                                  memory_gb=shard_mem)
+                                  memory_gb=shard_mem, phase_name=name)
             return mask
 
         # --- stage 1: gradient -------------------------------------------
@@ -184,10 +194,19 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
         hist["step"].append(float(step))
         hist["time"].append(clock.time if clock is not None else float(t + 1))
         hist["cost"].append(clock.dollars if clock is not None else 0.0)
+        if tel.enabled and dag is not None and dag.results:
+            rep = dag.critical_path()
+            tel.trace.set_attrs(it_span,
+                                critical_path=list(rep.critical_path),
+                                dag_makespan=rep.makespan)
+        tel.trace.end(it_span,
+                      clock.time if clock is not None else float(t + 1))
         if cfg.track_test_error and data.x_test is not None:
             hist["test_error"].append(
                 float(objective.error(w, data.x_test, data.y_test)))
         else:
             hist["test_error"].append(float("nan"))
     hist["w"] = w
+    tel.trace.end(run_span,
+                  clock.time if clock is not None else float(cfg.iters))
     return hist

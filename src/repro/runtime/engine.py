@@ -42,11 +42,13 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Callable, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.runtime import policies as _policies
 from repro.runtime.cost import CostLedger, CostModel, bill_phase
 
@@ -85,7 +87,7 @@ class FleetEngine:
 
     def __init__(self, model, fleet: Optional[FleetConfig] = None,
                  cost: Optional[CostModel] = None,
-                 recorder=None, replay=None, pool=None):
+                 recorder=None, replay=None, pool=None, telemetry=None):
         self.model = model
         self.fleet = fleet if fleet is not None else FleetConfig()
         self.cost_model = cost if cost is not None else CostModel()
@@ -94,6 +96,10 @@ class FleetEngine:
         self.recorder = recorder
         self.replay = replay
         self.pool = pool       # scheduler.WarmPool (or None: i.i.d. colds)
+        # obs.Telemetry (span tracer + metrics) or the zero-overhead no-op.
+        # Telemetry is pure observation: it draws no randomness and never
+        # moves the clock, so attaching it cannot change (seconds, dollars).
+        self.telemetry = telemetry if telemetry is not None else obs.NULL
         self._phase_idx = 0
 
     # ------------------------------------------------------------- totals
@@ -101,14 +107,21 @@ class FleetEngine:
     def dollars(self) -> float:
         return self.ledger.dollars(self.cost_model)
 
-    def charge(self, elapsed: float) -> None:
+    def charge(self, elapsed: float, phase_name: Optional[str] = None
+               ) -> None:
         """Add externally-computed phase time (no workers billed)."""
         if self.replay is not None:
             elapsed = self.replay.next_charge()
         elapsed = float(elapsed)
+        t0 = self.seconds
         self.seconds += elapsed
         if self.recorder is not None:
             self.recorder.record_charge(self._phase_idx, elapsed)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.trace.emit(phase_name or f"charge{self._phase_idx}",
+                           "charge", t0, t0 + elapsed)
+            tel.metrics.counter("fleet.charges").inc()
         self._phase_idx += 1
 
     # ----------------------------------------------------- lifecycle core
@@ -130,6 +143,11 @@ class FleetEngine:
         round_times: dict = {}
         stats = {"retries": 0, "warm": 0, "cold": 0,
                  "cold_delays": []}   # type: dict
+        # Per-attempt lifecycle records for the span tracer, collected only
+        # when telemetry is live (the trace recorder never reads this key).
+        events_out = [] if self.telemetry.enabled else None
+        if events_out is not None:
+            stats["events"] = events_out
 
         def duration(worker: int, attempt: int) -> float:
             # One jax sample round per retry wave, lazily — the common
@@ -173,6 +191,8 @@ class FleetEngine:
                 t_fail = t + t_cold + rng.uniform(0.05, 0.95) * run
                 attempts.append((t, t_fail))
                 stats["retries"] += 1
+                if events_out is not None:
+                    events_out.append((w, attempt, t, t_cold, t_fail, False))
                 if self.pool is not None:
                     # A function error does not tear the container down.
                     self.pool.release(t0 + t_fail)
@@ -184,9 +204,76 @@ class FleetEngine:
                 attempts.append((t, end))
                 successes += 1
                 done[w] = end
+                if events_out is not None:
+                    events_out.append((w, attempt, t, t_cold, end, True))
                 if self.pool is not None:
                     self.pool.release(t0 + end)
         return done, attempts, successes, stats
+
+    # ---------------------------------------------------------- telemetry
+    def _phase_telemetry(self, name: str, deps: Tuple[str, ...], start: float,
+                         elapsed: float, policy: str, num_workers: int,
+                         k: Optional[int], entry: CostLedger,
+                         stats: Optional[dict],
+                         extra_attempts: Optional[list], *,
+                         cost_model: Optional[CostModel] = None,
+                         replayed: bool = False) -> None:
+        """Emit one phase's span tree + metrics.  Pure observation of
+        already-computed values — no RNG, no clock movement."""
+        tel = self.telemetry
+        dollars = entry.dollars(cost_model if cost_model is not None
+                                else self.cost_model)
+        attrs = {"policy": policy, "workers": int(num_workers),
+                 "deps": list(deps), "gb_seconds": entry.gb_seconds,
+                 "dollars": dollars}
+        if k is not None:
+            attrs["k"] = int(k)
+        if replayed:
+            attrs["replayed"] = True
+        pid = tel.trace.emit(name, "phase", start, start + elapsed, **attrs)
+
+        m = tel.metrics
+        m.counter("fleet.phases").inc()
+        m.histogram("phase.elapsed_s").observe(elapsed)
+        m.histogram("phase.gb_seconds").observe(entry.gb_seconds)
+        m.histogram("phase.dollars").observe(dollars)
+        if stats is None:
+            return
+
+        # Per-worker lifecycle slices: cold start, then the running slice
+        # ("run" | "retry" on later attempts | "failed" when it died).
+        for (w, attempt, t, t_cold, t_end, ok) in stats.get("events", ()):
+            track = f"{name}/w{w}"
+            if t_cold > 0.0:
+                tel.trace.emit("cold", "attempt", start + t,
+                               start + t + t_cold, parent=pid, track=track)
+            slice_name = ("failed" if not ok
+                          else "run" if attempt == 0 else "retry")
+            tel.trace.emit(slice_name, "attempt", start + t + t_cold,
+                           start + t_end, parent=pid, track=track,
+                           attempt=attempt)
+            if ok:
+                # Completion time relative to phase launch: the Fig. 1
+                # straggler-tail distribution, as percentiles.
+                m.histogram("worker.completion_s").observe(t_end)
+        # Policy relaunches (speculative / hedged duplicates).
+        for i, (t_l, t_e) in enumerate(extra_attempts or ()):
+            if math.isfinite(t_e):
+                tel.trace.emit("relaunch", "attempt", start + t_l,
+                               start + t_e, parent=pid,
+                               track=f"{name}/spec{i}")
+        m.counter("fleet.attempts").inc(len(stats.get("events", ()))
+                                        or num_workers)
+        m.counter("fleet.relaunches").inc(len(extra_attempts or ()))
+        m.counter("fleet.retries").inc(stats["retries"])
+        m.counter("fleet.cold_starts").inc(stats["cold"])
+        m.counter("fleet.warm_hits").inc(stats["warm"])
+        for d in stats["cold_delays"]:
+            m.histogram("worker.cold_delay_s").observe(d)
+        if self.pool is not None:
+            m.gauge("pool.free").set(self.pool.free_at(self.seconds))
+            m.gauge("pool.warm_hits_total").set(self.pool.warm_hits)
+            m.gauge("pool.cold_starts_total").set(self.pool.cold_starts)
 
     # ------------------------------------------------------------- phases
     def run_phase(self, key: jax.Array, num_workers: int, *,
@@ -196,7 +283,9 @@ class FleetEngine:
                   comm_units: float = 0.0,
                   decodable: Optional[Callable[[np.ndarray], bool]] = None,
                   not_before: Optional[float] = None,
-                  memory_gb: Optional[float] = None
+                  memory_gb: Optional[float] = None,
+                  phase_name: Optional[str] = None,
+                  phase_deps: Tuple[str, ...] = ()
                   ) -> Tuple[float, np.ndarray]:
         """Simulate one distributed phase; returns (elapsed, finished_mask).
 
@@ -217,12 +306,26 @@ class FleetEngine:
         ``memory_gb`` bills this phase at its own Lambda size (a per-phase
         ``CostModel.memory_gb`` override, recorded in the trace row);
         None bills at the fleet-wide default.
+
+        ``phase_name`` / ``phase_deps`` are telemetry-only annotations
+        (span name + recorded dependency edges for critical-path
+        reconstruction); they never reach the trace recorder or any
+        numeric path.
         """
+        tel = self.telemetry
         if self.replay is not None:
             elapsed, mask, entry, advance = self.replay.next_phase(
                 policy=policy, num_workers=num_workers)
-            self.seconds += advance
+            t_end = self.seconds + advance
+            self.seconds = t_end
             self.ledger.add(entry)
+            if tel.enabled:
+                # An overlapped recorded phase (advance < elapsed) started
+                # before the pre-phase clock; recover its true interval.
+                self._phase_telemetry(
+                    phase_name or f"phase{self._phase_idx}", phase_deps,
+                    t_end - elapsed, elapsed, policy, num_workers, k,
+                    entry, None, None, replayed=True)
             self._phase_idx += 1
             return elapsed, mask
 
@@ -280,6 +383,11 @@ class FleetEngine:
             advance = max(0.0, float(not_before) + elapsed - self.seconds)
         self.seconds += advance
         self.ledger.add(entry)
+        if tel.enabled:
+            self._phase_telemetry(
+                phase_name or f"phase{self._phase_idx}", phase_deps, t0,
+                elapsed, policy, num_workers, k, entry, stats,
+                list(outcome.extra_attempts), cost_model=cost_model)
         if self.recorder is not None:
             # free_at, not len(): lazy TTL expiry means the raw pool still
             # holds containers no launch at the current clock could use.

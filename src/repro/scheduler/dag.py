@@ -68,6 +68,12 @@ class DagResult:
     def finish(self, name: str) -> float:
         return self.results[name].finish
 
+    def critical_path(self):
+        """Makespan-binding chain + per-phase slack of this dispatched DAG
+        (an ``obs.CriticalPathReport``; see ``repro.obs.critical_path``)."""
+        from repro import obs
+        return obs.from_dag(self)
+
 
 class DagRun:
     """Imperative phase-DAG dispatch against one clock.
@@ -124,7 +130,8 @@ class DagRun:
             flops_per_worker=spec.flops_per_worker,
             comm_units=spec.comm_units, decodable=spec.decodable,
             not_before=None if nb == now else nb,
-            memory_gb=spec.memory_gb)
+            memory_gb=spec.memory_gb,
+            phase_name=spec.name, phase_deps=spec.deps)
         finish = float(self.clock.time) if nb == now else nb + elapsed
         res = PhaseResult(spec=spec, start=nb, elapsed=float(elapsed),
                           finish=finish, mask=mask)
@@ -137,6 +144,12 @@ class DagRun:
         if not self.results:
             return 0.0
         return max(r.finish for r in self.results.values()) - self.start
+
+    def critical_path(self):
+        """Critical-path + slack report over the phases dispatched so far
+        (an ``obs.CriticalPathReport``; see ``repro.obs.critical_path``)."""
+        from repro import obs
+        return obs.from_dag(self)
 
 
 def run_dag(clock, key: jax.Array, specs: Sequence[PhaseSpec], *,

@@ -84,6 +84,13 @@ class WarmPool:
             del self._free[0]   # LRU evict: the longest-idle container
 
     # ------------------------------------------------------------- inspect
+    def snapshot(self, t: float) -> dict:
+        """Telemetry-friendly state: cumulative hit/miss counters plus the
+        warm, unexpired container count a launch at ``t`` would see."""
+        return {"warm_hits": self.warm_hits,
+                "cold_starts": self.cold_starts,
+                "free": self.free_at(t), "containers": len(self._free)}
+
     def free_at(self, t: float) -> int:
         """How many warm, unexpired containers a launch at ``t`` could use."""
         t = float(t)

@@ -181,6 +181,38 @@ def test_dag_golden_fixture_fleet_calibrates():
     assert fleet.cold_start_hi >= fleet.cold_start_lo > 0.0
 
 
+# ------------------------------------------- telemetry is observation-only
+def _assert_telemetry_inert(drive, rows, *, want_phases):
+    """Driving the golden schedule off the fixture with a LIVE telemetry
+    recorder attached must reproduce the exact totals the plain replay
+    gives — the no-op default and the live recorder are interchangeable
+    as far as the simulation is concerned."""
+    from repro import obs
+    plain = drive(SimClock(StragglerModel(), replay=TraceReplayer(rows)))
+    tel = obs.Telemetry()
+    live = drive(SimClock(StragglerModel(), replay=TraceReplayer(rows),
+                          telemetry=tel))
+    assert live.time == plain.time
+    assert live.dollars == plain.dollars
+    phase_spans = tel.trace.by_kind("phase")
+    assert len(phase_spans) == want_phases
+    assert all(s.attrs.get("replayed") for s in phase_spans)
+
+
+def test_golden_fixture_replays_identically_with_telemetry():
+    _, rows = _load()
+    _assert_telemetry_inert(
+        _drive, rows,
+        want_phases=sum(r["kind"] == "phase" for r in rows))
+
+
+def test_dag_golden_fixture_replays_identically_with_telemetry():
+    _, rows = _load(DAG_FIXTURE)
+    _assert_telemetry_inert(
+        _drive_dag, rows,
+        want_phases=sum(r["kind"] == "phase" for r in rows))
+
+
 def _regen():
     rec = TraceRecorder(worker_times=True)
     _drive(SimClock(StragglerModel(), fleet=_FLEET, recorder=rec))
