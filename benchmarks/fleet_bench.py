@@ -4,7 +4,10 @@ Every cell runs the same fixed workload (a few distributed rounds at a
 fixed per-worker flop count) through ``repro.runtime.FleetEngine`` via the
 SimClock facade and reports simulated seconds *and* simulated dollars —
 the time-vs-cost Pareto data that the fig10/fig12 comparisons sit on.
-One extra row self-checks trace record/replay bit-exactness.
+One extra row self-checks trace record/replay bit-exactness; another runs
+a two-regime fleet (per-worker work jumps 4x mid-run) under live health
+monitors and reports that the straggler detectors fired on the shift
+while attaching them changed no simulated totals.
 """
 from __future__ import annotations
 
@@ -34,6 +37,19 @@ def _run_cell(num_workers: int, failure_rate: float, policy: str,
         clock.phase(jax.random.PRNGKey(1000 * num_workers + r), num_workers,
                     policy=policy, k=k,
                     flops_per_worker=FLOPS_PER_WORKER, comm_units=1.0)
+    return clock
+
+
+def _two_regime_cell(telemetry=None) -> SimClock:
+    """A fleet whose per-worker work jumps 2e5 -> 8e5 flops mid-run: the
+    completion tail shifts 4x, exactly what the straggler monitors watch."""
+    clock = SimClock(StragglerModel(p_tail=0.05, tail_hi=3.0),
+                     fleet=FleetConfig(cold_start_prob=0.1),
+                     telemetry=telemetry)
+    for r in range(12):
+        clock.phase(jax.random.PRNGKey(7000 + r), 32, policy="k_of_n",
+                    k=25, flops_per_worker=2e5 if r < 6 else 8e5,
+                    comm_units=1.0)
     return clock
 
 
@@ -68,5 +84,20 @@ def run(quick: bool = True):
     rows.append(json_row("fleet_trace_replay", recorded.time * 1e6,
                          sim_s=recorded.time, usd=recorded.dollars,
                          replay_exact=exact))
+
+    # Health-monitor self-check: the 4x work shift must alert, and the
+    # monitored run must land on the exact same simulated totals.
+    plain = _two_regime_cell()
+    tel = obs.Telemetry(monitors=True)
+    monitored = _two_regime_cell(telemetry=tel)
+    shift_alerts = [a for a in tel.health.alerts
+                    if a.metric in ("worker.completion_s",
+                                    "phase.tail_p95_s")]
+    rows.append(json_row(
+        "fleet_two_regime_monitored", monitored.time * 1e6,
+        sim_s=monitored.time, usd=monitored.dollars,
+        alerts=len(tel.health.alerts), shift_alerts=len(shift_alerts),
+        monitor_inert=int(monitored.time == plain.time
+                          and monitored.dollars == plain.dollars)))
     print(obs.bench_rows_table(rows), file=sys.stderr)
     return rows

@@ -1,14 +1,21 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from sweep JSONs,
-or render telemetry tables from an obs JSONL export.
+render telemetry tables from an obs JSONL export, or diff two BENCH files.
 
   PYTHONPATH=src python -m benchmarks.make_report \
       --single sweep_single_pod.json --multi sweep_multi_pod.json
-  PYTHONPATH=src python -m benchmarks.make_report --trace run.perfetto.jsonl
+  PYTHONPATH=src python -m benchmarks.make_report \
+      --trace artifacts/run.perfetto.jsonl
+  PYTHONPATH=src python -m benchmarks.make_report \
+      --diff BENCH_kernels.prev.json BENCH_kernels.json
 
 ``--trace`` takes the JSONL sibling that ``benchmarks.run --trace-out``
 writes next to the Perfetto file, and renders the per-phase time/dollar
-breakdown plus a critical-path/slack table per recorded iteration DAG
+breakdown, a critical-path/slack table per recorded iteration DAG, and —
+when health monitors were attached — the alert log and per-detector state
 (via ``repro.obs``; same formatter the benchmark summaries share).
+
+``--diff`` renders the noise-aware row-by-row comparison from
+``repro.obs.diff`` (report-only; CI gates via ``repro.obs.diff --gate``).
 """
 from __future__ import annotations
 
@@ -74,7 +81,8 @@ def summarize(cells):
 
 
 def trace_report(rows):
-    """Per-phase breakdown + per-DAG critical-path tables from obs rows."""
+    """Per-phase breakdown + per-DAG critical-path tables from obs rows,
+    plus alert/detector tables when health monitors were attached."""
     from repro import obs
     out = ["### Per-phase breakdown\n", obs.phase_table(rows)]
     reports = obs.dag_reports_from_rows(rows)
@@ -83,7 +91,25 @@ def trace_report(rows):
         out.append(obs.critical_path_table(rep))
     if not reports:
         out.append("\n(no DAG-dispatched phases with recorded deps)")
+    health = next((r for r in rows if r.get("kind") == "health"), None)
+    if health is not None:
+        alerts = obs.alerts_from_rows(rows)
+        out.append(f"\n### Health monitors: {len(alerts)} alert(s)\n")
+        if alerts:
+            out.append(obs.alert_table(rows))
+            out.append("")
+        out.append(obs.detector_table(rows))
     return "\n".join(out)
+
+
+def diff_report(base_path, new_path):
+    from repro.obs import diff as obs_diff
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    rep = obs_diff.diff_bench(base, new)
+    return "### Bench diff: " + rep.summary() + "\n\n" + rep.table()
 
 
 def main(argv=None):
@@ -92,14 +118,21 @@ def main(argv=None):
     ap.add_argument("--multi", type=str, default=None)
     ap.add_argument("--trace", type=str, default=None,
                     help="obs JSONL export (from benchmarks.run --trace-out)")
+    ap.add_argument("--diff", type=str, nargs=2, default=None,
+                    metavar=("BASE", "NEW"),
+                    help="render a noise-aware diff of two BENCH_*.json")
     ap.add_argument("--out", type=str, default=None)
     args = ap.parse_args(argv)
-    if bool(args.single) == bool(args.trace):
-        ap.error("pass exactly one of --single / --trace")
+    modes = sum(bool(m) for m in (args.single, args.trace, args.diff))
+    if modes != 1:
+        ap.error("pass exactly one of --single / --trace / --diff")
 
-    if args.trace:
-        from repro import obs
-        text = trace_report(obs.load_jsonl(args.trace))
+    if args.trace or args.diff:
+        if args.trace:
+            from repro import obs
+            text = trace_report(obs.load_jsonl(args.trace))
+        else:
+            text = diff_report(*args.diff)
         if args.out:
             with open(args.out, "w") as f:
                 f.write(text)

@@ -7,9 +7,17 @@ Prints ``name,us_per_call,derived`` CSV rows.  Default is the quick profile
 paper's experiments; see repro/configs/paper.py).
 
 Modules listed in ``PERSIST_JSON`` additionally write their rows (plus
-backend / jax-version metadata) to a ``BENCH_*.json`` file at the repo
-root — the persistent perf trajectory CI archives per push, so kernel
-regressions have a baseline to diff against (see kernels/README.md).
+backend / jax-version / git-sha / config-hash metadata) to a
+``BENCH_*.json`` file at the repo root — the persistent perf trajectory CI
+archives per push, so kernel regressions have a baseline to diff against
+(see kernels/README.md).  Before overwriting a prior BENCH file the driver
+prints a report-only noise-aware diff against it (``repro.obs.diff``), and
+``--store`` appends the fresh payload to a cross-run JSONL warehouse
+(``repro.obs.store``) for history-aware gating.
+
+Trace/report artifacts default into the git-ignored ``artifacts/``
+directory: a bare ``--trace-out run.perfetto.json`` lands at
+``artifacts/run.perfetto.json`` (explicit directories are honored).
 """
 from __future__ import annotations
 
@@ -21,6 +29,7 @@ import sys
 import time
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+ARTIFACTS = REPO_ROOT / "artifacts"
 
 # module -> repo-root JSON file persisting its rows as a perf baseline
 PERSIST_JSON = {
@@ -44,6 +53,16 @@ MODULES = [
 ]
 
 
+def _artifact_path(name: str) -> pathlib.Path:
+    """Bare filenames land in the git-ignored ``artifacts/`` directory;
+    paths with an explicit directory component are honored as-is."""
+    p = pathlib.Path(name)
+    if p.parent == pathlib.Path("."):
+        p = ARTIFACTS / p
+    p.parent.mkdir(parents=True, exist_ok=True)
+    return p
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -53,7 +72,11 @@ def main(argv=None) -> int:
     ap.add_argument("--trace-out", type=str, default=None,
                     help="write a Perfetto trace of an instrumented run "
                          "here (modules whose run() accepts trace_out; "
-                         "a .jsonl sibling feeds make_report --trace)")
+                         "a .jsonl sibling feeds make_report --trace; "
+                         "bare filenames go under artifacts/)")
+    ap.add_argument("--store", type=str, default=None,
+                    help="append each persisted BENCH payload to this "
+                         "cross-run JSONL store (repro.obs.store)")
     args = ap.parse_args(argv)
 
     mods = MODULES
@@ -69,7 +92,7 @@ def main(argv=None) -> int:
         kwargs = {}
         if args.trace_out and \
                 "trace_out" in inspect.signature(mod.run).parameters:
-            kwargs["trace_out"] = args.trace_out
+            kwargs["trace_out"] = str(_artifact_path(args.trace_out))
         try:
             rows = mod.run(quick=not args.full, **kwargs)
         except Exception as e:   # noqa: BLE001 — surface and continue
@@ -81,6 +104,10 @@ def main(argv=None) -> int:
             print(f"{r['name']},{r['us']:.1f},{r['derived']}")
         if mod_name in PERSIST_JSON:
             import jax
+
+            from repro.obs import diff as obs_diff
+            from repro.obs import store as obs_store
+
             # Every persisted row carries a ``path`` field naming what
             # actually executed (fused | fused_tiled | unfused | ref |
             # pallas) so the perf trajectory is attributable; backfill
@@ -93,14 +120,37 @@ def main(argv=None) -> int:
                     "profile": "full" if args.full else "quick",
                     "backend": jax.default_backend(),
                     "jax_version": jax.__version__,
+                    "git_sha": obs_store.git_sha(REPO_ROOT),
+                    "config_hash": obs_store.config_hash(
+                        {"module": mod_name,
+                         "profile": "full" if args.full else "quick"}),
                     "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
                                          time.gmtime()),
                 },
                 "rows": rows,
             }
             path = REPO_ROOT / PERSIST_JSON[mod_name]
+            if path.exists():
+                # Report-only noise-aware diff vs the file being replaced
+                # (CI gates via `repro.obs.diff --gate`; here we only warn).
+                try:
+                    prior = json.loads(path.read_text())
+                    rep = obs_diff.diff_bench(prior, payload)
+                    print(f"# diff vs previous {path.name}: {rep.summary()}",
+                          file=sys.stderr)
+                    for row in rep.regressions:
+                        print(f"#   regression: {row.name}: {row.detail}",
+                              file=sys.stderr)
+                except Exception as e:  # noqa: BLE001 — diff is best-effort
+                    print(f"# diff vs previous {path.name} failed: {e}",
+                          file=sys.stderr)
             path.write_text(json.dumps(payload, indent=1) + "\n")
             print(f"# wrote {path}", file=sys.stderr)
+            if args.store:
+                store = obs_store.Store(_artifact_path(args.store))
+                store.append(obs_store.bench_record(payload))
+                print(f"# appended {mod_name} to {store.path}",
+                      file=sys.stderr)
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
     return 1 if failures else 0
 

@@ -99,12 +99,13 @@ def _newton_end_to_end(schedule: str, iters: int, telemetry=None):
 
 def _traced_newton_row(trace_out: str, iters: int):
     """The ``--trace-out`` path: re-run the DAG-scheduled Newton with live
-    telemetry, export + validate a Perfetto trace (gradient chain ||
-    Hessian-sketch overlap with per-worker lifecycle slices), dump the
-    JSONL sibling for ``benchmarks.make_report --trace``, and self-check
-    that attaching the recorder changed nothing."""
+    telemetry AND health monitors, export + validate a Perfetto trace
+    (gradient chain || Hessian-sketch overlap with per-worker lifecycle
+    slices), dump the JSONL sibling for ``benchmarks.make_report
+    --trace``, and self-check that attaching the recorder + monitors
+    changed nothing."""
     t_plain, c_plain = _newton_end_to_end("dag", iters)
-    tel = obs.Telemetry()
+    tel = obs.Telemetry(monitors=True)
     t_dag, c_dag = _newton_end_to_end("dag", iters, telemetry=tel)
     trace = obs.to_perfetto(tel.trace.spans)
     obs.perfetto.validate_trace(
@@ -119,6 +120,7 @@ def _traced_newton_row(trace_out: str, iters: int):
         "sched_newton_traced", t_dag * 1e6, sim_s=t_dag, usd=c_dag,
         spans=len(tel.trace.spans),
         events=len(trace["traceEvents"]),
+        alerts=len(tel.health.alerts),
         recorder_inert=int(t_dag == t_plain and c_dag == c_plain)) \
         | {"path": "dag"}
 

@@ -444,6 +444,12 @@ def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
             tel.metrics.gauge("sketch.m_eff").set(m_eff)
             tel.metrics.gauge("sketch.mp_debias").set(
                 max(0.0, 1.0 - d / m_eff) if m_eff > 0 else 0.0)
+            # Survivor count per sketch round: the straggler-aware
+            # provisioning statistic the launch planner reads back out of
+            # the cross-run store (obs.store run records keep the full
+            # per-round series).
+            tel.metrics.histogram("sketch.survivors").observe(
+                float(jnp.sum(survivors)))
         return h_hat, m_eff
     # exact Hessian (paper's "exact Newton" baseline)
     block_flops = 2.0 * b * min(d, b) ** 2    # one (b x d_tile) gram block
@@ -699,6 +705,15 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
         if tel.enabled:
             tel.metrics.gauge("newton.sketch_dim").set(
                 live_cfg.sketch.sketch_dim)
+            # Per-iteration seconds/dollars deltas: the cost-per-iteration
+            # streams the online health monitors watch for blowups.
+            many = len(hist["time"]) > 1
+            tel.metrics.gauge("newton.iter_seconds").set(
+                hist["time"][-1] - (hist["time"][-2] if many else 0.0))
+            tel.metrics.gauge("newton.iter_dollars").set(
+                hist["cost"][-1] - (hist["cost"][-2] if many else 0.0))
+            if cfg.solver in ("cg", "minres"):
+                tel.metrics.gauge("newton.cg_iters").set(cfg.cg_iters)
             if dag is not None and dag.results:
                 # Per-iteration critical-path + slack report (ROADMAP's
                 # DagResult analytics item), attached to the iteration

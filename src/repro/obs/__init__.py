@@ -23,32 +23,51 @@ metric names):
 """
 from repro.obs.critical_path import (CriticalPathReport, PhaseSlack,
                                      critical_path, from_dag)
-from repro.obs.export import (bench_rows_table, critical_path_table,
-                              dag_reports_from_rows, dump_jsonl, format_table,
-                              load_jsonl, phase_summary_rows, phase_table,
+from repro.obs.export import (alert_table, alerts_from_rows,
+                              bench_rows_table, critical_path_table,
+                              dag_reports_from_rows, detector_table,
+                              dump_jsonl, format_table, load_jsonl,
+                              phase_summary_rows, phase_table,
                               telemetry_rows)
+from repro.obs.health import (Alert, Cusum, HealthMonitors, RobustZScore,
+                              Rule, default_rules)
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                NullMetrics)
 from repro.obs.perfetto import (dumps_stable, to_perfetto, validate_file,
                                 validate_trace)
 from repro.obs.perfetto import dump as dump_perfetto
+from repro.obs.diff import DiffReport, RowDiff, diff_bench, diff_rows, diff_store
 from repro.obs.span import NullTracer, Span, SpanTracer
+from repro.obs.store import (Store, bench_record, config_hash, git_sha,
+                             run_record)
 
 
 class Telemetry:
-    """A live tracer + metrics registry pair; pass to ``SimClock``."""
+    """A live tracer + metrics registry pair; pass to ``SimClock``.
+
+    ``monitors`` optionally attaches a ``health.HealthMonitors`` (or
+    ``monitors=True`` for the default rule set): the streaming anomaly
+    detectors then watch every metric update and record ``Alert``s —
+    still pure observation, the simulation cannot tell the difference.
+    """
 
     enabled = True
 
-    def __init__(self):
+    def __init__(self, monitors=None):
         self.trace = SpanTracer()
         self.metrics = MetricsRegistry()
+        self.health = None
+        if monitors is True:
+            monitors = HealthMonitors()
+        if monitors is not None:
+            monitors.attach(self)
 
 
 class _NullTelemetry:
     """The zero-overhead default: both halves are no-ops."""
 
     enabled = False
+    health = None
 
     def __init__(self):
         self.trace = NullTracer()
@@ -62,10 +81,15 @@ __all__ = [
     "Telemetry", "NULL",
     "Span", "SpanTracer", "NullTracer",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "NullMetrics",
+    "Alert", "Cusum", "HealthMonitors", "RobustZScore", "Rule",
+    "default_rules",
+    "Store", "bench_record", "run_record", "config_hash", "git_sha",
+    "DiffReport", "RowDiff", "diff_bench", "diff_rows", "diff_store",
     "CriticalPathReport", "PhaseSlack", "critical_path", "from_dag",
     "to_perfetto", "dumps_stable", "dump_perfetto", "validate_trace",
     "validate_file",
     "telemetry_rows", "dump_jsonl", "load_jsonl", "format_table",
     "phase_table", "phase_summary_rows", "critical_path_table",
     "dag_reports_from_rows", "bench_rows_table",
+    "alert_table", "alerts_from_rows", "detector_table",
 ]

@@ -24,8 +24,14 @@ from repro.obs.span import Span
 
 # ----------------------------------------------------------------- JSONL
 def telemetry_rows(telemetry) -> List[dict]:
-    """Span rows + one metrics row, JSON-ready."""
+    """Span rows, health-monitor alert/state rows (when monitors are
+    attached), then one metrics row — JSON-ready."""
     rows = [s.as_row() for s in telemetry.trace.spans]
+    health = getattr(telemetry, "health", None)
+    if health is not None:
+        rows.extend(a.as_row() for a in health.alerts)
+        rows.append({"kind": "health", "detectors": health.state_rows(),
+                     **health.summary()})
     rows.append({"kind": "metrics", **telemetry.metrics.snapshot()})
     return rows
 
@@ -138,6 +144,40 @@ def dag_reports_from_rows(rows: Iterable[dict]) -> List[CriticalPathReport]:
         has_deps[parent] = has_deps.get(parent, False) or bool(attrs["deps"])
     return [critical_path(g) for parent, g in sorted(groups.items())
             if has_deps[parent]]
+
+
+# ------------------------------------------------------- health / alerts
+def alerts_from_rows(rows: Iterable[dict]) -> List[dict]:
+    """The ``kind: "alert"`` rows of a JSONL export (file order)."""
+    return [r for r in rows if r.get("kind") == "alert"]
+
+
+def alert_table(rows: Iterable[dict]) -> str:
+    """Tabulate alert rows (``Alert.as_row()`` dicts carry
+    ``kind: "alert"``, so a full JSONL export can be passed directly)."""
+    alerts = alerts_from_rows(rows)
+    body = [(a["t"], a["metric"], a["detector"], a["direction"], a["value"],
+             a["score"], a["threshold"], a["sample"]) for a in alerts]
+    return format_table(("t(s)", "metric", "detector", "dir", "value",
+                         "score", "limit", "sample#"), body)
+
+
+def detector_table(rows: Iterable[dict]) -> str:
+    """Per-detector state table from a JSONL export's ``health`` row (or
+    directly from ``HealthMonitors.state_rows()`` dicts)."""
+    rows = list(rows)
+    health = next((r for r in rows if r.get("kind") == "health"), None)
+    states = health["detectors"] if health is not None else rows
+    body = []
+    for s in states:
+        extras = "; ".join(f"{k}={format(v, '.4g') if isinstance(v, float) else v}"
+                           for k, v in sorted(s.items())
+                           if k not in ("metric", "detector", "alerts",
+                                        "samples"))
+        body.append((s["metric"], s["detector"], s.get("samples", ""),
+                     s.get("alerts", 0), extras))
+    return format_table(("metric", "detector", "samples", "alerts", "state"),
+                        body)
 
 
 # ------------------------------------------------- benchmark row formatter

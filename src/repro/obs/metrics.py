@@ -21,19 +21,32 @@ randomness and reads no clock, so attaching it never perturbs a run.
 Metric names are dotted paths (``fleet.cold_starts``, ``phase.dollars``,
 ``kernel.path.fused_tiled``); ``snapshot()`` returns them sorted, so the
 JSONL export is deterministic.
+
+A registry optionally carries a ``listener`` — anything with an
+``on_metric(kind, name, delta, value)`` method (``repro.obs.health``'s
+streaming anomaly detectors are the shipped one).  Every instrument update
+forwards through it, which is what makes online monitoring possible
+without a second instrumentation pass; a listener is itself pure
+observation and must never mutate the run.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 
 @dataclasses.dataclass
 class Counter:
     value: float = 0.0
+    name: str = ""
+    registry: Optional["MetricsRegistry"] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def inc(self, v: float = 1.0) -> None:
         self.value += v
+        reg = self.registry
+        if reg is not None and reg.listener is not None:
+            reg.listener.on_metric("counter", self.name, v, self.value)
 
 
 @dataclasses.dataclass
@@ -42,18 +55,30 @@ class Gauge:
 
     value: float = 0.0
     series: List[float] = dataclasses.field(default_factory=list)
+    name: str = ""
+    registry: Optional["MetricsRegistry"] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def set(self, v: float) -> None:
         self.value = float(v)
         self.series.append(self.value)
+        reg = self.registry
+        if reg is not None and reg.listener is not None:
+            reg.listener.on_metric("gauge", self.name, self.value, self.value)
 
 
 @dataclasses.dataclass
 class Histogram:
     values: List[float] = dataclasses.field(default_factory=list)
+    name: str = ""
+    registry: Optional["MetricsRegistry"] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def observe(self, v: float) -> None:
         self.values.append(float(v))
+        reg = self.registry
+        if reg is not None and reg.listener is not None:
+            reg.listener.on_metric("hist", self.name, float(v), float(v))
 
     @property
     def count(self) -> int:
@@ -74,26 +99,33 @@ class Histogram:
     def summary(self) -> dict:
         return {"count": self.count, "sum": self.total,
                 "p50": self.percentile(50), "p90": self.percentile(90),
-                "p99": self.percentile(99),
+                "p95": self.percentile(95), "p99": self.percentile(99),
                 "max": max(self.values) if self.values else float("nan")}
 
 
 class MetricsRegistry:
     enabled = True
 
-    def __init__(self):
+    def __init__(self, listener=None):
         self.counters: Dict[str, Counter] = {}
         self.gauges: Dict[str, Gauge] = {}
         self.histograms: Dict[str, Histogram] = {}
+        # Optional on_metric(kind, name, delta, value) observer — the hook
+        # repro.obs.health's online detectors attach through.  May be set
+        # after instruments already exist; they all hold a registry
+        # back-reference, so late attachment sees every later update.
+        self.listener = listener
 
     def counter(self, name: str) -> Counter:
-        return self.counters.setdefault(name, Counter())
+        return self.counters.setdefault(name,
+                                        Counter(name=name, registry=self))
 
     def gauge(self, name: str) -> Gauge:
-        return self.gauges.setdefault(name, Gauge())
+        return self.gauges.setdefault(name, Gauge(name=name, registry=self))
 
     def histogram(self, name: str) -> Histogram:
-        return self.histograms.setdefault(name, Histogram())
+        return self.histograms.setdefault(name,
+                                          Histogram(name=name, registry=self))
 
     def snapshot(self) -> dict:
         """Deterministic (sorted-name) dump of every instrument."""

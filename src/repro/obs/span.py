@@ -23,8 +23,11 @@ from typing import Dict, List, Optional
 
 
 #: Span kinds, outermost first.  ``track`` is only meaningful for
-#: worker-lifecycle kinds (it names the Perfetto worker track).
-KINDS = ("run", "iteration", "phase", "charge", "attempt")
+#: worker-lifecycle kinds (it names the Perfetto worker track).  ``alert``
+#: spans are zero-duration markers the health monitors drop into the tree
+#: at the simulated instant an anomaly was detected; the Perfetto exporter
+#: skips them (they live in the JSONL export and report tables).
+KINDS = ("run", "iteration", "phase", "charge", "attempt", "alert")
 
 
 @dataclasses.dataclass
@@ -66,6 +69,11 @@ class SpanTracer:
         self._by_id: Dict[int, Span] = {}
         self._stack: List[int] = []
         self._next_id = 1
+        # High-water mark of every timestamp seen so far (simulated
+        # seconds).  Consumers that observe the run through side channels —
+        # the health monitors watch the metrics stream, which carries no
+        # clock — stamp their records with this instead of guessing.
+        self.last_time = 0.0
 
     # ------------------------------------------------------------ hierarchy
     @property
@@ -83,6 +91,8 @@ class SpanTracer:
         self.spans.append(span)
         self._by_id[sid] = span
         self._stack.append(sid)
+        if span.start > self.last_time:
+            self.last_time = span.start
         return sid
 
     def end(self, span_id: int, end: float) -> None:
@@ -90,6 +100,8 @@ class SpanTracer:
         opened after it too (crash-robust unwinding)."""
         if span_id not in self._by_id:
             raise KeyError(f"unknown span id {span_id}")
+        if float(end) > self.last_time:
+            self.last_time = float(end)
         while self._stack:
             sid = self._stack.pop()
             self._by_id[sid].end = float(end)
@@ -108,6 +120,8 @@ class SpanTracer:
                     end=float(end), track=track, attrs=dict(attrs))
         self.spans.append(span)
         self._by_id[sid] = span
+        if math.isfinite(span.end) and span.end > self.last_time:
+            self.last_time = span.end
         return sid
 
     def set_attrs(self, span_id: int, **attrs) -> None:
@@ -134,6 +148,7 @@ class NullTracer:
     enabled = False
     spans: List[Span] = []          # always empty; shared sentinel is fine
     current = 0
+    last_time = 0.0
 
     def begin(self, name, kind, start, **attrs) -> int:
         return 0

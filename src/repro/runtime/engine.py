@@ -240,6 +240,18 @@ class FleetEngine:
         if stats is None:
             return
 
+        # Per-phase straggler-tail quantile: the p95 of this round's
+        # successful completion offsets, one sample per phase — the
+        # health monitors' spike stream (per-worker samples feed the
+        # drift CUSUM below; both are derived from already-computed
+        # lifecycle events, so this stays observation-only).
+        completions = sorted(t_end for (_, _, _, _, t_end, ok)
+                             in stats.get("events", ()) if ok)
+        if completions:
+            rank = min(len(completions) - 1,
+                       int(round(0.95 * (len(completions) - 1))))
+            m.histogram("phase.tail_p95_s").observe(completions[rank])
+
         # Per-worker lifecycle slices: cold start, then the running slice
         # ("run" | "retry" on later attempts | "failed" when it died).
         for (w, attempt, t, t_cold, t_end, ok) in stats.get("events", ()):
@@ -274,6 +286,11 @@ class FleetEngine:
             m.gauge("pool.free").set(self.pool.free_at(self.seconds))
             m.gauge("pool.warm_hits_total").set(self.pool.warm_hits)
             m.gauge("pool.cold_starts_total").set(self.pool.cold_starts)
+            served = stats["warm"] + stats["cold"]
+            if served:
+                # Per-phase hit rate — the stream the health monitors'
+                # pool-collapse detector watches.
+                m.gauge("pool.hit_rate").set(stats["warm"] / served)
 
     # ------------------------------------------------------------- phases
     def run_phase(self, key: jax.Array, num_workers: int, *,

@@ -184,9 +184,11 @@ def test_dag_golden_fixture_fleet_calibrates():
 # ------------------------------------------- telemetry is observation-only
 def _assert_telemetry_inert(drive, rows, *, want_phases):
     """Driving the golden schedule off the fixture with a LIVE telemetry
-    recorder attached must reproduce the exact totals the plain replay
-    gives — the no-op default and the live recorder are interchangeable
-    as far as the simulation is concerned."""
+    recorder attached — and again with live HEALTH MONITORS watching the
+    metric stream — must reproduce the exact totals the plain replay
+    gives: the no-op default, the live recorder, and the recorder plus
+    streaming anomaly detectors are all interchangeable as far as the
+    simulation is concerned."""
     from repro import obs
     plain = drive(SimClock(StragglerModel(), replay=TraceReplayer(rows)))
     tel = obs.Telemetry()
@@ -197,6 +199,17 @@ def _assert_telemetry_inert(drive, rows, *, want_phases):
     phase_spans = tel.trace.by_kind("phase")
     assert len(phase_spans) == want_phases
     assert all(s.attrs.get("replayed") for s in phase_spans)
+    monitored_tel = obs.Telemetry(monitors=True)
+    monitored = drive(SimClock(StragglerModel(),
+                               replay=TraceReplayer(rows),
+                               telemetry=monitored_tel))
+    assert monitored.time == plain.time
+    assert monitored.dollars == plain.dollars
+    # The listener really is wired into the registry (live-path coverage
+    # of detector sampling is in test_health), and a healthy golden
+    # replay stays silent.
+    assert monitored_tel.metrics.listener is monitored_tel.health is not None
+    assert monitored_tel.health.alerts == []
 
 
 def test_golden_fixture_replays_identically_with_telemetry():

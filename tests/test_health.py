@@ -1,0 +1,235 @@
+"""Online health monitors: hand-computed detector fixtures, listener
+wiring, alert emission, and the observation-only contract on a live
+fleet drive.
+
+The detector tests pin exact arithmetic (median/MAD z-scores, frozen
+-baseline CUSUM accumulation) against values computed by hand in the
+test, so a refactor that changes the statistics — not just the API —
+fails loudly.
+"""
+import math
+
+import jax
+import pytest
+
+from repro import obs
+from repro.core.straggler import SimClock, StragglerModel
+from repro.obs.health import Alert, Cusum, HealthMonitors, RobustZScore, Rule
+from repro.runtime import FleetConfig
+
+
+# ------------------------------------------------------- RobustZScore
+def test_zscore_hand_computed_spike():
+    # Window [10, 12, 11, 13, 9, 11, 12, 10]: median 11, absolute
+    # deviations sorted [0,0,1,1,1,1,2,2] -> MAD 1, scale 1.4826.
+    det = RobustZScore(window=8, z=4.0, min_samples=8)
+    for x in (10, 12, 11, 13, 9, 11, 12, 10):
+        assert det.update(x) is None          # warming up
+    fired = det.update(20.0)
+    assert fired is not None
+    score, threshold, direction = fired
+    assert score == pytest.approx((20.0 - 11.0) / 1.4826)
+    assert threshold == 4.0 and direction == "high"
+
+
+def test_zscore_scores_against_prior_window_and_low_side():
+    det = RobustZScore(window=8, z=4.0, min_samples=8)
+    for x in (10, 12, 11, 13, 9, 11, 12, 10):
+        det.update(x)
+    # In-band sample: |10.5 - 11| / 1.4826 << 4 -> silent.
+    assert det.update(10.5) is None
+    det2 = RobustZScore(window=8, z=4.0, min_samples=8)
+    for x in (10, 12, 11, 13, 9, 11, 12, 10):
+        det2.update(x)
+    score, _, direction = det2.update(1.0)
+    assert direction == "low" and score < 0
+    assert score == pytest.approx((1.0 - 11.0) / 1.4826)
+
+
+def test_zscore_rel_floor_suppresses_tight_stream_wobble():
+    # A statistically tight stream (MAD ~ 0 around 100): without a floor,
+    # a 3% wobble is a 20-sigma event; with rel_floor=0.25 the scale is
+    # clamped to 25 and the wobble scores 0.12.
+    loose = RobustZScore(window=8, z=4.0, min_samples=8, rel_floor=0.25)
+    tight = RobustZScore(window=8, z=4.0, min_samples=8)
+    stream = (100.0, 100.1, 99.9, 100.0, 100.05, 99.95, 100.0, 100.1)
+    for x in stream:
+        loose.update(x)
+        tight.update(x)
+    assert tight.update(103.0) is not None     # fires without the floor
+    assert loose.update(103.0) is None         # floored scale: silent
+    assert loose.last_score == pytest.approx((103.0 - 100.0) / 25.0)
+
+
+def test_cusum_hand_computed_drift():
+    # Baseline [9, 11] x 4: mean 10, population std 1.  Then two samples
+    # of 14 at k=0.5: s_pos = 0 + 4 - 0.5 = 3.5, then 3.5 + 4 - 0.5 = 7,
+    # which crosses h=5 and fires with the accumulated score.
+    det = Cusum(k=0.5, h=5.0, min_samples=8)
+    for x in (9, 11) * 4:
+        assert det.update(x) is None
+    assert det.mean == pytest.approx(10.0)
+    assert det.std == pytest.approx(1.0)
+    assert det.update(14.0) is None
+    assert det.s_pos == pytest.approx(3.5)
+    fired = det.update(14.0)
+    assert fired is not None
+    score, threshold, direction = fired
+    assert score == pytest.approx(7.0)
+    assert threshold == 5.0 and direction == "high"
+    # Firing resets both accumulators (bounded re-alert rate).
+    assert det.s_pos == 0.0 and det.s_neg == 0.0
+
+
+def test_cusum_low_side_and_body_decay():
+    det = Cusum(k=0.5, h=5.0, min_samples=4)
+    for x in (10.0, 10.0, 9.0, 11.0):
+        det.update(x)
+    # Downward shift accumulates s_neg: z = -4 each -> s_neg += 3.5.
+    assert det.update(6.8) is None
+    fired = det.update(6.8)
+    assert fired is not None and fired[2] == "low" and fired[0] < 0
+    # An in-baseline sample decays the accumulator by k.
+    det2 = Cusum(k=0.5, h=5.0, min_samples=4)
+    for x in (10.0, 10.0, 9.0, 11.0):
+        det2.update(x)
+    det2.update(12.0)
+    high_water = det2.s_pos
+    det2.update(10.0)
+    assert det2.s_pos == pytest.approx(max(0.0, high_water - 0.5))
+
+
+def test_detectors_reject_tiny_min_samples():
+    with pytest.raises(ValueError):
+        RobustZScore(min_samples=1)
+    with pytest.raises(ValueError):
+        Cusum(min_samples=0)
+
+
+# -------------------------------------------------- listener wiring
+def test_monitors_watch_registry_stream_and_emit_alert_spans():
+    # Baseline (10, 10, 9, 11): mean 10, population std sqrt(0.5).  Each
+    # 14 contributes z - k = 4/sqrt(0.5) - 0.5 ~ 5.157 of CUSUM mass, so
+    # h=12 is crossed exactly on the third one (s_pos ~ 15.47).
+    rules = (Rule("lat", lambda: Cusum(k=0.5, h=12.0, min_samples=4),
+                  kinds=("hist",)),)
+    tel = obs.Telemetry(monitors=HealthMonitors(rules))
+    hist = tel.metrics.histogram("lat")
+    for x in (10.0, 10.0, 9.0, 11.0, 14.0, 14.0, 14.0):
+        hist.observe(x)
+    assert len(tel.health.alerts) == 1
+    a = tel.health.alerts[0]
+    assert isinstance(a, Alert)
+    assert a.metric == "lat" and a.detector == "cusum"
+    assert a.sample == 7 and a.direction == "high"
+    assert a.score == pytest.approx(3 * (4.0 / math.sqrt(0.5) - 0.5))
+    # The alert also landed in the span tree as a zero-duration marker...
+    spans = tel.trace.by_kind("alert")
+    assert len(spans) == 1
+    assert spans[0].name == "alert:lat"
+    assert spans[0].start == spans[0].end
+    # ...and in the JSONL rows, next to a health-state row.
+    rows = obs.telemetry_rows(tel)
+    assert [r["metric"] for r in obs.alerts_from_rows(rows)] == ["lat"]
+    health = next(r for r in rows if r.get("kind") == "health")
+    assert health["alerts"] == 1
+    assert health["detectors"][0]["metric"] == "lat"
+
+
+def test_monitors_rule_kinds_filter_and_unwatched_metrics():
+    rules = (Rule("only.gauge", lambda: Cusum(min_samples=2),
+                  kinds=("gauge",)),)
+    tel = obs.Telemetry(monitors=HealthMonitors(rules))
+    tel.metrics.histogram("only.gauge").observe(1.0)   # wrong kind
+    tel.metrics.counter("unrelated").inc()             # unwatched name
+    assert tel.health.detectors == {}
+    tel.metrics.gauge("only.gauge").set(1.0)
+    assert ("only.gauge", 0) in tel.health.detectors
+
+
+def test_alerts_stamped_with_tracer_high_water_mark():
+    rules = (Rule("lat", lambda: Cusum(k=0.5, h=5.0, min_samples=4),
+                  kinds=("hist",)),)
+    tel = obs.Telemetry(monitors=HealthMonitors(rules))
+    tel.trace.emit("phase/x", "phase", 3.25, 7.5)
+    for x in (10.0, 10.0, 9.0, 11.0, 14.0, 14.0, 14.0):
+        tel.metrics.histogram("lat").observe(x)
+    assert tel.health.alerts[0].t == 7.5
+
+
+def test_telemetry_monitors_true_uses_default_rules():
+    tel = obs.Telemetry(monitors=True)
+    assert tel.health is not None
+    assert tel.metrics.listener is tel.health
+    assert {r.metric for r in tel.health.rules} >= {
+        "worker.completion_s", "phase.tail_p95_s", "sketch.mp_debias"}
+
+
+# -------------------------------- observation-only + default tuning
+def _fleet_drive(telemetry=None, shift=False):
+    """Twelve 32-worker rounds; with ``shift`` the per-worker work jumps
+    4x at the halfway mark (the tail the straggler monitors watch)."""
+    clock = SimClock(StragglerModel(p_tail=0.05, tail_hi=3.0),
+                     fleet=FleetConfig(cold_start_prob=0.1),
+                     telemetry=telemetry)
+    for r in range(12):
+        flops = 8e5 if (shift and r >= 6) else 2e5
+        clock.phase(jax.random.PRNGKey(7000 + r), 32, policy="k_of_n",
+                    k=25, flops_per_worker=flops, comm_units=1.0)
+    return clock
+
+
+def test_monitored_fleet_drive_is_observation_only():
+    plain = _fleet_drive()
+    tel = obs.Telemetry(monitors=True)
+    monitored = _fleet_drive(telemetry=tel)
+    assert monitored.time == plain.time
+    assert monitored.dollars == plain.dollars
+
+
+def test_default_rules_quiet_on_healthy_drive_loud_on_shift():
+    healthy = obs.Telemetry(monitors=True)
+    _fleet_drive(telemetry=healthy)
+    assert healthy.health.alerts == []
+    shifted = obs.Telemetry(monitors=True)
+    _fleet_drive(telemetry=shifted, shift=True)
+    completion_alerts = [a for a in shifted.health.alerts
+                         if a.metric == "worker.completion_s"]
+    assert completion_alerts, "4x work shift must trip the straggler cusum"
+    # 6 rounds x 32 workers = 192 pre-shift samples: every firing is
+    # attributable to the shift, none to healthy straggler tails.
+    assert all(a.sample > 192 for a in completion_alerts)
+    assert all(a.direction == "high" for a in completion_alerts)
+
+
+def test_monitor_summary_counts_by_metric():
+    rules = (Rule("a", lambda: Cusum(k=0.5, h=5.0, min_samples=2),
+                  kinds=("gauge",)),)
+    tel = obs.Telemetry(monitors=HealthMonitors(rules))
+    g = tel.metrics.gauge("a")
+    for x in (10.0, 10.0, 20.0, 20.0, 20.0, 20.0):
+        g.set(x)
+    s = tel.health.summary()
+    assert s["alerts"] == len(tel.health.alerts) >= 1
+    assert s["by_metric"]["a"] == s["alerts"]
+    assert s["metrics_watched"] == 1
+
+
+def test_alert_and_detector_tables_render():
+    rules = (Rule("lat", lambda: Cusum(k=0.5, h=5.0, min_samples=4),
+                  kinds=("hist",)),)
+    tel = obs.Telemetry(monitors=HealthMonitors(rules))
+    for x in (10.0, 10.0, 9.0, 11.0, 14.0, 14.0, 14.0):
+        tel.metrics.histogram("lat").observe(x)
+    rows = obs.telemetry_rows(tel)
+    alert_tbl = obs.alert_table(rows)
+    assert "lat" in alert_tbl and "cusum" in alert_tbl
+    det_tbl = obs.detector_table(rows)
+    assert "lat" in det_tbl and "cusum" in det_tbl
+
+
+def test_zscore_nan_free_on_constant_stream():
+    det = RobustZScore(window=8, z=4.0, min_samples=4)
+    for _ in range(10):
+        det.update(5.0)
+    assert math.isfinite(det.last_score)

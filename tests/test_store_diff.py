@@ -1,0 +1,209 @@
+"""Cross-run store round-trips and the noise-aware bench regression gate.
+
+The diff half runs against two COMMITTED golden BENCH fixtures
+(``tests/fixtures/bench_{base,head}_golden.json``) that seed exactly one
+material regression (``kernel_gram_fused`` doubling its wall-clock) among
+rows exercising every other verdict: a within-noise drift, an
+abs-floor-suppressed jump on a trivial row, one added and one removed
+row.  The gate must catch the seeded regression — and nothing else.
+"""
+import json
+import pathlib
+
+import jax
+import pytest
+
+from repro import obs
+from repro.core.straggler import SimClock, StragglerModel
+from repro.obs import diff as obs_diff
+from repro.obs import store as obs_store
+from repro.runtime import FleetConfig
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures"
+BASE = FIXTURES / "bench_base_golden.json"
+HEAD = FIXTURES / "bench_head_golden.json"
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+# ------------------------------------------------------------- keys
+def test_config_hash_canonical_and_order_insensitive():
+    h1 = obs_store.config_hash({"module": "kernels_bench", "profile": "quick"})
+    h2 = obs_store.config_hash({"profile": "quick", "module": "kernels_bench"})
+    assert h1 == h2
+    assert len(h1) == 12 and int(h1, 16) >= 0
+    assert h1 != obs_store.config_hash({"module": "kernels_bench",
+                                        "profile": "full"})
+
+
+def test_git_sha_never_raises(tmp_path):
+    assert obs_store.git_sha(str(tmp_path)) == "unknown"   # not a repo
+    sha = obs_store.git_sha()
+    assert sha and isinstance(sha, str)
+
+
+def test_bench_record_backfills_legacy_meta():
+    rec = obs_store.bench_record(
+        {"meta": {"module": "kernels_bench", "backend": "cpu",
+                  "jax_version": "0.4"},
+         "rows": [{"name": "r", "us": 1.0}]})
+    assert rec["git_sha"] == "unknown"
+    assert rec["config_hash"] == "unknown"
+    assert rec["rows"][0]["path"] == "unknown"
+    assert rec["kind"] == "bench"
+
+
+# ------------------------------------------------------------- store
+def _bench_payload(sha, us):
+    return {"meta": {"module": "kernels_bench", "backend": "cpu",
+                     "jax_version": "0.4", "git_sha": sha,
+                     "config_hash": "c" * 12, "profile": "quick",
+                     "utc": "2026-08-07T00:00:00Z"},
+            "rows": [{"name": "kernel_gram_fused", "us": us,
+                      "path": "fused", "derived": "gflops=1"}]}
+
+
+def test_store_append_query_roundtrip(tmp_path):
+    store = obs_store.Store(tmp_path / "hist.jsonl")
+    assert store.records() == []
+    assert store.latest() is None
+    assert store.last_two() is None
+    store.append(obs_store.bench_record(_bench_payload("sha1", 100.0)))
+    store.append(obs_store.bench_record(_bench_payload("sha2", 120.0)))
+    recs = store.records(kind="bench", name="kernels_bench")
+    assert [r["git_sha"] for r in recs] == ["sha1", "sha2"]
+    assert store.latest()["git_sha"] == "sha2"
+    prev, latest = store.last_two(kind="bench", name="kernels_bench")
+    assert (prev["git_sha"], latest["git_sha"]) == ("sha1", "sha2")
+    hist = store.history("kernel_gram_fused", name="kernels_bench")
+    assert [h["us"] for h in hist] == [100.0, 120.0]
+    assert store.kernel_path_table() == {
+        "kernel_gram_fused": {"us": 120.0, "path": "fused"}}
+    assert store.records(name="nonexistent") == []
+
+
+def test_store_rejects_records_missing_key_fields(tmp_path):
+    store = obs_store.Store(tmp_path / "hist.jsonl")
+    with pytest.raises(ValueError, match="key fields"):
+        store.append({"kind": "bench", "name": "x"})
+    assert not store.path.exists()
+
+
+def test_run_record_roundtrips_through_store(tmp_path):
+    tel = obs.Telemetry(monitors=True)
+    clock = SimClock(StragglerModel(p_tail=0.05, tail_hi=3.0),
+                     fleet=FleetConfig(cold_start_prob=0.1), telemetry=tel)
+    for r in range(3):
+        clock.phase(jax.random.PRNGKey(r), 8, policy="k_of_n", k=6,
+                    flops_per_worker=2e5, comm_units=1.0)
+    rec = obs_store.run_record(
+        "fleet_smoke", tel, backend="cpu", jax_version=jax.__version__,
+        sha="deadbee", cfg_hash="c" * 12, extra={"note": "test"})
+    assert rec["kind"] == "run" and rec["note"] == "test"
+    tail = rec["straggler_tail"]
+    assert tail["count"] == 24
+    assert tail["p50"] <= tail["p95"] <= tail["p99"]
+    assert {p["phase"] for p in rec["phases"]} == \
+        {"phase0", "phase1", "phase2"}
+    assert rec["health"]["alerts"] == len(rec.get("alerts", []))
+    store = obs_store.Store(tmp_path / "hist.jsonl")
+    store.append(rec)
+    back = store.latest(kind="run", name="fleet_smoke")
+    assert back["git_sha"] == "deadbee"
+    assert back["straggler_tail"]["p95"] == pytest.approx(tail["p95"])
+
+
+def test_store_cli_append_show_history(tmp_path, capsys):
+    bench = tmp_path / "BENCH_x.json"
+    bench.write_text(json.dumps(_bench_payload("sha9", 42.0)))
+    store_path = str(tmp_path / "hist.jsonl")
+    assert obs_store.main(["append", str(bench), "--store", store_path]) == 0
+    assert obs_store.main(["show", "--store", store_path]) == 0
+    assert obs_store.main(["history", "--store", store_path,
+                           "--name", "kernels_bench",
+                           "--row", "kernel_gram_fused"]) == 0
+    out = capsys.readouterr().out
+    assert "sha9" in out and "kernels_bench" in out
+    assert "| 42" in out and "fused" in out     # the history row's timing
+
+
+# ----------------------------------------------------------- diff unit
+def test_diff_rows_sim_key_drift_overrides_quiet_wallclock():
+    base = [{"name": "r", "us": 100.0, "derived": "sim_s=1.0;usd=0.010"}]
+    worse = [{"name": "r", "us": 101.0, "derived": "sim_s=1.05;usd=0.010"}]
+    rows = obs_diff.diff_rows(base, worse)
+    assert rows[0].status == "regression"
+    assert "sim_s" in rows[0].detail
+    better = [{"name": "r", "us": 101.0, "derived": "sim_s=0.9;usd=0.010"}]
+    assert obs_diff.diff_rows(base, better)[0].status == "improvement"
+
+
+def test_diff_rows_abs_floor_and_per_row_override():
+    base = [{"name": "tiny", "us": 40.0, "derived": ""},
+            {"name": "noisy_row", "us": 1000.0, "derived": ""}]
+    new = [{"name": "tiny", "us": 90.0, "derived": ""},
+           {"name": "noisy_row", "us": 1900.0, "derived": ""}]
+    rows = {r.name: r for r in obs_diff.diff_rows(base, new)}
+    assert rows["tiny"].status == "ok"          # +50us == floor, not over
+    assert rows["noisy_row"].status == "regression"
+    rows2 = {r.name: r for r in obs_diff.diff_rows(
+        base, new, per_row={"noisy_": 1.5})}
+    assert rows2["noisy_row"].status == "ok"    # prefix override
+
+
+# --------------------------------------------------------- diff golden
+def test_diff_golden_catches_exactly_the_seeded_regression():
+    report = obs_diff.diff_bench(_load(BASE), _load(HEAD))
+    assert [r.name for r in report.regressions] == ["kernel_gram_fused"]
+    seeded = report.regressions[0]
+    assert seeded.ratio == pytest.approx(2.0)
+    by_name = {r.name: r.status for r in report.rows}
+    assert by_name == {"kernel_gram_fused": "regression",
+                       "kernel_gram_unfused": "ok",       # +4% within noise
+                       "sched_newton": "ok",              # sim keys steady
+                       "kernel_tiny": "ok",               # abs floor
+                       "kernel_retired_row": "removed",
+                       "kernel_new_row": "added"}
+    assert "aaaaaaa" in report.summary() and "bbbbbbb" in report.summary()
+    assert "kernel_gram_fused" in report.table(only_changed=True)
+    assert report.to_json()["regressions"] == ["kernel_gram_fused"]
+
+
+def test_diff_cli_gate_exit_codes(tmp_path, capsys):
+    # Report-only (first-landing CI mode): regressions print but exit 0.
+    assert obs_diff.main([str(BASE), str(HEAD)]) == 0
+    # Gate mode: the seeded regression flips the exit code to 2.
+    verdict = tmp_path / "verdict.json"
+    assert obs_diff.main([str(BASE), str(HEAD), "--gate",
+                          "--json", str(verdict)]) == 2
+    assert json.loads(verdict.read_text())["regressions"] == \
+        ["kernel_gram_fused"]
+    out = capsys.readouterr()
+    assert "kernel_gram_fused" in out.out
+    assert "GATE FAILED" in out.err
+
+
+def test_diff_cli_store_mode(tmp_path, capsys):
+    store_path = tmp_path / "hist.jsonl"
+    store = obs_store.Store(store_path)
+    # One record: nothing to diff, gate passes vacuously.
+    store.append(obs_store.bench_record(_load(BASE)))
+    assert obs_diff.main(["--store", str(store_path),
+                          "--name", "kernels_bench", "--gate"]) == 0
+    assert "vacuously" in capsys.readouterr().out
+    # Two records: the seeded regression gates.
+    store.append(obs_store.bench_record(_load(HEAD)))
+    assert obs_diff.main(["--store", str(store_path),
+                          "--name", "kernels_bench"]) == 0
+    assert obs_diff.main(["--store", str(store_path),
+                          "--name", "kernels_bench", "--gate"]) == 2
+
+
+def test_make_report_diff_mode(tmp_path, capsys):
+    from benchmarks import make_report
+    assert make_report.main(["--diff", str(BASE), str(HEAD)]) == 0
+    out = capsys.readouterr().out
+    assert "Bench diff" in out and "kernel_gram_fused" in out
