@@ -31,8 +31,14 @@ import time
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 ARTIFACTS = REPO_ROOT / "artifacts"
 
-# module -> repo-root JSON file persisting its rows as a perf baseline
+# module -> repo-root JSON file persisting its rows as a perf baseline.
+# Two modules may share one file (fleet_bench + scheduler_bench both feed
+# BENCH_fleet.json): within one invocation their rows are merged by name
+# (later module wins on collision) so the second write doesn't clobber
+# the first; ``--store`` still appends each module's own payload
+# separately, keyed by its module name.
 PERSIST_JSON = {
+    "fleet_bench": "BENCH_fleet.json",
     "kernels_bench": "BENCH_kernels.json",
     "scheduler_bench": "BENCH_fleet.json",
 }
@@ -86,6 +92,7 @@ def main(argv=None) -> int:
 
     print("name,us_per_call,derived")
     failures = 0
+    written: dict = {}   # BENCH file -> payload written this invocation
     for mod_name in mods:
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
         t0 = time.time()
@@ -129,13 +136,27 @@ def main(argv=None) -> int:
                 },
                 "rows": rows,
             }
-            path = REPO_ROOT / PERSIST_JSON[mod_name]
+            file_rel = PERSIST_JSON[mod_name]
+            file_payload = payload
+            prior_merge = written.get(file_rel)
+            if prior_merge is not None:
+                # Another module already wrote this file in this
+                # invocation: merge by row name instead of clobbering.
+                names = {r["name"] for r in rows}
+                file_payload = {
+                    "meta": {**payload["meta"],
+                             "module": (prior_merge["meta"]["module"]
+                                        + "+" + mod_name)},
+                    "rows": [r for r in prior_merge["rows"]
+                             if r["name"] not in names] + rows,
+                }
+            path = REPO_ROOT / file_rel
             if path.exists():
                 # Report-only noise-aware diff vs the file being replaced
                 # (CI gates via `repro.obs.diff --gate`; here we only warn).
                 try:
                     prior = json.loads(path.read_text())
-                    rep = obs_diff.diff_bench(prior, payload)
+                    rep = obs_diff.diff_bench(prior, file_payload)
                     print(f"# diff vs previous {path.name}: {rep.summary()}",
                           file=sys.stderr)
                     for row in rep.regressions:
@@ -144,7 +165,8 @@ def main(argv=None) -> int:
                 except Exception as e:  # noqa: BLE001 — diff is best-effort
                     print(f"# diff vs previous {path.name} failed: {e}",
                           file=sys.stderr)
-            path.write_text(json.dumps(payload, indent=1) + "\n")
+            path.write_text(json.dumps(file_payload, indent=1) + "\n")
+            written[file_rel] = file_payload
             print(f"# wrote {path}", file=sys.stderr)
             if args.store:
                 store = obs_store.Store(_artifact_path(args.store))

@@ -3,7 +3,7 @@ from repro.core.sketch import (OverSketchConfig, CountSketch,
                                sample_countsketch, apply_sketch,
                                sketched_gram, oversketched_gram)
 from repro.core.coded import (ProductCode, make_code, encode_2d, coded_matvec,
-                              peel_decode)
+                              detect_corrupted, peel_decode, verified_decode)
 from repro.core.straggler import StragglerModel, SimClock
 from repro.core.objectives import (Dataset, LogisticRegression,
                                    SoftmaxRegression, RidgeRegression,

@@ -113,6 +113,83 @@ def decode_matvec(products: jax.Array, known: jax.Array, code: ProductCode,
     return y[:out_rows], ok
 
 
+def detect_corrupted(products: jax.Array, known: jax.Array,
+                     code: ProductCode, rtol: float = 1e-3) -> jax.Array:
+    """Parity-check detection of corrupted (not merely missing) products.
+
+    The same single-parity-check constraints the peeling decoder uses for
+    erasures double as integrity checks: a *corrupted* known cell violates
+    both its row and its column constraint, while an erased cell merely
+    makes its two lines uncheckable (a constraint needs every cell of the
+    line).  A known cell is flagged when at least one of its checks fires
+    and the other fires or is uncheckable — exact for a single corrupted
+    cell in a fully-known grid, conservative when corruption shares lines
+    with erasures (over-flagging demotes innocents to erasures; an
+    undecodable pattern then falls through to the master's billed full
+    relaunch, never to a silently wrong result).
+
+    Returns a ((g+1), (g+1)) bool grid of cells to demote to erasures,
+    feeding the existing ``peel_decode`` path unchanged.
+    """
+    from repro.kernels.coded_matvec import parity_residuals  # lazy: layering
+    del code  # geometry is carried by the grid shape itself
+    row_res, row_mag, col_res, col_mag = parity_residuals(products, known)
+    full_rows = known.all(axis=1)
+    full_cols = known.all(axis=0)
+    tiny = jnp.finfo(jnp.float32).tiny
+    rows_bad = full_rows & (row_res > rtol * (row_mag + tiny))
+    cols_bad = full_cols & (col_res > rtol * (col_mag + tiny))
+    flagged = ((rows_bad[:, None] & cols_bad[None, :])
+               | (rows_bad[:, None] & ~full_cols[None, :])
+               | (cols_bad[None, :] & ~full_rows[:, None]))
+    return known & flagged
+
+
+def verified_decode(products: jax.Array, arrived: jax.Array,
+                    code: ProductCode, out_rows: int, rtol: float = 1e-3
+                    ) -> Tuple[Optional[jax.Array], bool, int]:
+    """Corruption-tolerant decode: detect, erase, peel, then verify.
+
+    1. ``detect_corrupted`` localizes corrupted cells with at least one
+       checkable line and demotes them to erasures.
+    2. The peeling decoder runs on the surviving cells (undecodable
+       pattern => give up).
+    3. Verification: the decoded systematic blocks extend to a *unique*
+       codeword grid (parities are exact sums of block products — the
+       products are linear in the blocks); any surviving arrived cell
+       that disagrees with that extension witnesses corruption the
+       detector could not localize, so the decode is rejected rather
+       than silently wrong.
+
+    Returns ``(y, ok, flagged)``: the decoded matvec (None when
+    rejected), whether it is trustworthy, and how many cells the
+    detector demoted.  The one blind spot is fundamental, not a decoder
+    weakness: a corrupted systematic cell whose three witnesses (its row
+    parity, its column parity, the corner) are all erased leaves the
+    arrived data exactly consistent with a valid codeword carrying the
+    corrupted value — no decoder can tell the difference.  Callers
+    relaunch on ``ok=False`` (the paper's straggler fallback, reused).
+    """
+    flagged = detect_corrupted(products, arrived, code, rtol)
+    n_flagged = int(jnp.sum(flagged))
+    known = arrived & ~flagged
+    sys_blocks, ok = peel_decode(products, known, code)
+    if not bool(ok):
+        return None, False, n_flagged
+    # Unique codeword extension of the decoded systematic part.
+    row_par = sys_blocks.sum(axis=1, keepdims=True)
+    top = jnp.concatenate([sys_blocks, row_par], axis=1)
+    col_par = top.sum(axis=0, keepdims=True)
+    full = jnp.concatenate([top, col_par], axis=0)     # (g+1, g+1, b)
+    resid = jnp.linalg.norm(full - products, axis=-1)
+    mag = jnp.linalg.norm(full, axis=-1) + jnp.finfo(jnp.float32).tiny
+    mismatch = known & (resid > rtol * mag)
+    if bool(mismatch.any()):
+        return None, False, n_flagged
+    y = sys_blocks.reshape(code.padded_blocks * code.block_rows)
+    return y[:out_rows], True, n_flagged
+
+
 def coded_matvec(enc: jax.Array, x: jax.Array, code: ProductCode,
                  out_rows: int,
                  erased: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:

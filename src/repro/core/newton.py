@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from functools import partial
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -34,6 +35,7 @@ import numpy as np
 from repro.core import coded, linesearch, sketch, solvers, straggler
 from repro.core.objectives import Dataset
 from repro import obs, scheduler, sketching
+from repro.runtime.faults import PhaseExhaustedError
 
 
 def _telemetry(clock) -> "obs.Telemetry":
@@ -124,6 +126,20 @@ class NewtonConfig:
     # or not f has stalled yet (ROADMAP: the MP factor says *when*).
     adaptive_metric: str = "stall"
     adaptive_mp_target: float = 0.75
+    # Graceful degradation under a fault plan (repro.runtime.faults) whose
+    # retry budget genuinely exhausts (FleetConfig.fail_open=False).
+    # "degrade": accept the surviving sketch blocks when at least
+    # survivor_floor of num_blocks landed; below the floor, re-dispatch
+    # the sketch round once on fresh capacity; if that exhausts too, take
+    # a plain gradient step for the iteration.  "raise": propagate
+    # PhaseExhaustedError to the caller (strict mode).
+    fault_fallback: str = "degrade"
+    survivor_floor: float = 0.5
+    # Parity-check detection of corrupted coded-matvec products (fault
+    # plan CorruptionSpec): detected cells are demoted to erasures and
+    # flow through the existing peeling decoder; off = trust arrived
+    # bytes (the silent-corruption negative control).
+    corruption_detection: bool = True
 
 
 @dataclasses.dataclass
@@ -135,6 +151,15 @@ class NewtonResult:
 def _phase_mem(enabled: bool, working_set_bytes: float) -> Optional[float]:
     """Declared Lambda size for a phase, or None for the fleet-wide 3 GB."""
     return scheduler.lambda_memory_gb(working_set_bytes) if enabled else None
+
+
+def _ws_gb(working_set_bytes: float) -> float:
+    """True per-worker working set in GB, always declared to the engine
+    (``working_set_gb``) — unlike the billed ``memory_gb``, which stays
+    opt-in via ``phase_memory``.  Inert unless a fault plan with an
+    ``OomSpec`` is attached: an undersized Lambda then OOM-kills instead
+    of merely billing cheap."""
+    return float(working_set_bytes) / 2.0 ** 30
 
 
 class CodedMatvecEngine:
@@ -151,10 +176,12 @@ class CodedMatvecEngine:
 
     def __init__(self, data: Dataset, block_rows: int,
                  model: Optional[straggler.StragglerModel],
-                 overlap_encode: bool = True, phase_memory: bool = False):
+                 overlap_encode: bool = True, phase_memory: bool = False,
+                 corruption_detection: bool = True):
         self.model = model
         self.overlap_encode = overlap_encode
         self.phase_memory = phase_memory
+        self.corruption_detection = corruption_detection
         self._encode_pending = {"X", "XT"}
         self._encode_t0: Optional[float] = None
         n, d = data.x.shape
@@ -166,6 +193,16 @@ class CodedMatvecEngine:
         self.enc_xt = coded.encode_2d(data.x.T, self.code_xt)
         self.out_rows = {"X": n, "XT": d}
         self.fallbacks = 0
+        # Degraded-mode latch: flips on the first *observed* corruption
+        # (a parity flag or a codeword-verification reject).  From then
+        # on coded phases wait for FULL arrival instead of the first
+        # peelable subset — with every cell present, row x column parity
+        # intersection localizes corruption exactly and the verification
+        # backstop catches sign-cancellation pathologies, so every later
+        # matvec is either exact or a billed relaunch, never silently
+        # wrong.  (Racing ahead of stragglers is what lets corruption be
+        # absorbed into peel-recovered cells undetectably.)
+        self.paranoid = False
 
         @partial(jax.jit, static_argnames=("tag",))
         def _mv(tag, v, erased):
@@ -195,8 +232,10 @@ class CodedMatvecEngine:
         w = code.num_workers
         enc = self.enc_x if tag == "X" else self.enc_xt
         flops = 2.0 * code.block_rows * enc.shape[-1]   # one block matvec
-        mem = _phase_mem(self.phase_memory, scheduler.matvec_worker_bytes(
-            code.block_rows, enc.shape[-1]))
+        mem_bytes = scheduler.matvec_worker_bytes(code.block_rows,
+                                                  enc.shape[-1])
+        mem = _phase_mem(self.phase_memory, mem_bytes)
+        ws = _ws_gb(mem_bytes)
         enc_floor = {"t": None}   # set if this call bills an encode phase
 
         def phase(k, policy, *, kk=None, decodable=None, comm_units=1.0):
@@ -208,13 +247,26 @@ class CodedMatvecEngine:
                 res = dag.dispatch(scheduler.PhaseSpec(
                     name=name or tag, workers=w, policy=policy,
                     k=kk, flops_per_worker=flops, comm_units=comm_units,
-                    memory_gb=mem, decodable=decodable, deps=after),
-                    key=k, min_start=enc_floor["t"])
+                    memory_gb=mem, working_set_gb=ws, decodable=decodable,
+                    deps=after), key=k, min_start=enc_floor["t"])
                 return res.elapsed, res.mask
             return clock.phase(k, w, policy=policy, k=kk,
                                flops_per_worker=flops,
                                comm_units=comm_units, decodable=decodable,
-                               memory_gb=mem, phase_name=name or tag)
+                               memory_gb=mem, working_set_gb=ws,
+                               phase_name=name or tag)
+
+        def phase_safe(k, policy, **kw):
+            # A fault plan with a real retry budget (fail_open=False) can
+            # exhaust mid-phase: the attempts are already billed and the
+            # clock advanced; degrade to whatever arrived — the coded
+            # path treats the dead workers as erasures.
+            try:
+                return phase(k, policy, **kw)
+            except PhaseExhaustedError as e:
+                _telemetry(clock).metrics.counter(
+                    "coded.exhausted_phases").inc()
+                return e.elapsed, jnp.asarray(e.mask)
         if self.model is not None and tag in self._encode_pending:
             # One-time product-code encode of this operand, billed on
             # first use.  Both encodes launch when the engine comes up
@@ -231,34 +283,93 @@ class CodedMatvecEngine:
                 # path so the clock stays bit-identical to it (the
                 # engine's advance=elapsed shortcut, no ULP re-rounding).
                 nb = None
-            clock.phase(jax.random.fold_in(key, 555), w, policy="wait_all",
-                        flops_per_worker=enc_flops, comm_units=1.0,
-                        not_before=nb, memory_gb=mem,
-                        phase_name=f"encode:{tag}")
+            try:
+                clock.phase(jax.random.fold_in(key, 555), w,
+                            policy="wait_all", flops_per_worker=enc_flops,
+                            comm_units=1.0, not_before=nb, memory_gb=mem,
+                            working_set_gb=ws, phase_name=f"encode:{tag}")
+            except PhaseExhaustedError:
+                # Encode attempts billed, budget gone: the master re-runs
+                # the cheap parity sums locally; the operand is still
+                # usable, so only the wasted round is lost.
+                _telemetry(clock).metrics.counter(
+                    "coded.exhausted_phases").inc()
             # After this call the clock sits at (at least) the encode's
             # finish — the earliest instant this operand can be consumed.
             enc_floor["t"] = clock.time
         erased = None
+        corrupt = None
+        arrived = None
         if self.model is not None and policy == "coded":
             # Faithful master: results stream in; decode starts as soon as
             # the arrived set is peelable (paper Alg. 1 step 8).  The
             # streaming wait runs through the fleet engine's coded_decode
             # policy with the peeling-feasibility predicate.
             g1 = code.grid + 1
-            k_min = max(1, w - (2 * code.grid + 1))
-            _, mask = phase(key, "coded_decode", kk=k_min,
-                            decodable=lambda m: _decodable(~m.reshape(g1, g1)))
-            erased = jnp.asarray(~np.asarray(mask)).reshape(g1, g1)
+            if self.paranoid and self.corruption_detection:
+                _, mask = phase_safe(key, "wait_all")
+            else:
+                k_min = max(1, w - (2 * code.grid + 1))
+                _, mask = phase_safe(key, "coded_decode", kk=k_min,
+                                     decodable=lambda m: _decodable(
+                                         ~m.reshape(g1, g1)))
+            arrived = np.asarray(mask)
+            erased = jnp.asarray(~arrived).reshape(g1, g1)
+            lc = clock.last_corruption
+            if lc is not None:
+                # The fault plane flagged some arrived results as
+                # corrupted (bit flips / stale S3 reads).  Report the
+                # per-phase block error rate even when zero — the health
+                # monitors need the clean baseline to detect the shift.
+                corrupt = np.asarray(lc) & arrived
+                tel = _telemetry(clock)
+                if tel.enabled:
+                    tel.metrics.gauge("coded.block_error_rate").set(
+                        float(corrupt.sum()) / float(w))
         elif self.model is not None and policy == "wait_all":
-            phase(key, "wait_all")
+            phase_safe(key, "wait_all")
         elif self.model is not None and policy == "speculative":
-            phase(key, "speculative")
+            phase_safe(key, "speculative")
         elif self.model is not None and policy == "ignore":
             # mini-batch style: drop stragglers' contributions entirely —
             # handled by the caller using an uncoded gradient; we still pay
             # the k-of-n time.
-            phase(key, "k_of_n", kk=max(1, int(0.95 * w)))
-        y, ok = self._mv(tag, v, erased)
+            phase_safe(key, "k_of_n", kk=max(1, int(0.95 * w)))
+        if corrupt is not None and corrupt.any():
+            # Reconstruct what the master actually received: clean block
+            # products plus seeded garbage at the corrupted cells.
+            g1 = code.grid + 1
+            prods = coded.coded_block_products(enc, v)
+            noise = (jnp.sqrt(jnp.mean(prods ** 2)) + 1e-30) * \
+                jax.random.normal(jax.random.fold_in(key, 777), prods.shape)
+            cgrid = jnp.asarray(corrupt.reshape(g1, g1))
+            prods = jnp.where(cgrid[..., None], prods + noise, prods)
+            known = jnp.asarray(arrived.reshape(g1, g1))
+            tel = _telemetry(clock)
+            if tel.enabled:
+                tel.metrics.counter("coded.corruption_injected").inc(
+                    int(corrupt.sum()))
+            if self.corruption_detection:
+                # Parity checks demote localizable corruption to erasures;
+                # the post-decode codeword verification rejects anything
+                # that slipped through (ok=False -> billed full relaunch
+                # below) instead of returning a silently wrong product.
+                y, ok, n_flagged = coded.verified_decode(
+                    prods, known, code, self.out_rows[tag])
+                if tel.enabled and n_flagged:
+                    tel.metrics.counter("coded.corruption_detected").inc(
+                        n_flagged)
+                if (n_flagged or not bool(ok)) and not self.paranoid:
+                    self.paranoid = True
+                    if tel.enabled:
+                        tel.metrics.counter("coded.paranoid_mode").inc()
+                if y is None:
+                    y = jnp.zeros((self.out_rows[tag],), prods.dtype)
+            else:
+                y, ok = coded.decode_matvec(prods, known, code,
+                                            self.out_rows[tag])
+        else:
+            y, ok = self._mv(tag, v, erased)
         if erased is not None and not bool(ok):
             # Decode failure (erasure pattern beyond the code): the paper's
             # master re-launches stragglers; charge a full re-execution round.
@@ -268,15 +379,26 @@ class CodedMatvecEngine:
                 _telemetry(clock).metrics.counter(
                     "coded.decode_fallbacks").inc()
                 kf = jax.random.fold_in(key, 1)
-                if dag is not None:
-                    dag.dispatch(scheduler.PhaseSpec(
-                        name=(name or tag) + "/retry", workers=w,
-                        policy="wait_all", comm_units=1.0, memory_gb=mem,
-                        deps=((name or tag),)), key=kf)
-                else:
-                    clock.phase(kf, w, policy="wait_all", comm_units=1.0,
-                                memory_gb=mem,
-                                phase_name=(name or tag) + "/retry")
+                try:
+                    # An exhausted compute phase never registered with the
+                    # DAG, so only declare the edge when the dep exists;
+                    # otherwise the barrier at the current clock stands in.
+                    if dag is not None and (name or tag) in dag.results:
+                        dag.dispatch(scheduler.PhaseSpec(
+                            name=(name or tag) + "/retry", workers=w,
+                            policy="wait_all", comm_units=1.0,
+                            memory_gb=mem, working_set_gb=ws,
+                            deps=((name or tag),)), key=kf)
+                    else:
+                        clock.phase(kf, w, policy="wait_all",
+                                    comm_units=1.0, memory_gb=mem,
+                                    working_set_gb=ws,
+                                    phase_name=(name or tag) + "/retry")
+                except PhaseExhaustedError:
+                    # The relaunch round itself exhausted: its attempts
+                    # are billed, the master already recomputed y above.
+                    _telemetry(clock).metrics.counter(
+                        "coded.exhausted_phases").inc()
         return y
 
 
@@ -386,6 +508,10 @@ def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
     """Returns (H_hat, m_eff): the (approximate or exact) Hessian including
     the hess_reg * I term, and the surviving sketch-row count m_eff that the
     Marchenko-Pastur debias factor needs (None on the exact path).
+    Under a fault plan with ``fail_open=False`` and
+    ``cfg.fault_fallback="degrade"``, ``(None, None)`` means the sketch
+    round (and its one re-dispatch) lost too many blocks to trust — the
+    caller takes a plain gradient step for the iteration.
 
     Worker accounting follows the paper: a sketched Hessian invokes
     (N+e)*(d/b)^2 workers (Alg. 2 step 3) vs ceil(n/b)*(d/b)^2 for the exact
@@ -402,15 +528,20 @@ def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
     b = max(cfg.sketch.block_size, 1)
     d_blocks = max(1, -(-d // b))
 
-    def run(workers, policy, k=None, flops=0.0, comm=0.0, mem=None):
+    def run(workers, policy, k=None, flops=0.0, comm=0.0, mem=None,
+            ws=None, name=None, rkey=None, min_start=None):
+        name = tag if name is None else name
+        rkey = key if rkey is None else rkey
         if dag is not None:
             return dag.dispatch(scheduler.PhaseSpec(
-                name=tag, workers=workers, policy=policy, k=k,
+                name=name, workers=workers, policy=policy, k=k,
                 flops_per_worker=flops, comm_units=comm,
-                memory_gb=mem), key=key).mask
-        _, mask = clock.phase(key, workers, policy=policy, k=k,
+                memory_gb=mem, working_set_gb=ws), key=rkey,
+                min_start=min_start).mask
+        _, mask = clock.phase(rkey, workers, policy=policy, k=k,
                               flops_per_worker=flops, comm_units=comm,
-                              memory_gb=mem, phase_name=tag)
+                              memory_gb=mem, working_set_gb=ws,
+                              phase_name=name)
         return mask
 
     if cfg.hessian_policy == "oversketch":
@@ -423,11 +554,45 @@ def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
             # tile groups run in parallel (phase time ~ one k-of-n round);
             # the master I/O scales with the full worker count.
             total_workers = scfg.total_blocks * d_blocks * d_blocks
-            mem = _phase_mem(cfg.phase_memory, scheduler.sketch_worker_bytes(
-                scfg.block_size, min(d, b)))
-            survivors = run(scfg.total_blocks, "k_of_n", k=scfg.num_blocks,
-                            flops=fam.block_flops(n_rows, d),
-                            comm=fam.comm_units(d) * total_workers, mem=mem)
+            mem_bytes = scheduler.sketch_worker_bytes(scfg.block_size,
+                                                      min(d, b))
+            kw = dict(k=scfg.num_blocks, flops=fam.block_flops(n_rows, d),
+                      comm=fam.comm_units(d) * total_workers,
+                      mem=_phase_mem(cfg.phase_memory, mem_bytes),
+                      ws=_ws_gb(mem_bytes))
+            try:
+                survivors = run(scfg.total_blocks, "k_of_n", **kw)
+            except PhaseExhaustedError as e:
+                if cfg.fault_fallback == "raise":
+                    raise
+                # The sketch round exhausted its retry budget (attempts
+                # billed, clock advanced).  Every sketch block is
+                # per-block unbiased, so any survivor subset is still an
+                # unbiased (thinner) sketch: accept the survivors when at
+                # least survivor_floor of num_blocks landed — m_eff
+                # shrinks and the MP debias absorbs the extra bias.
+                # Below the floor, re-dispatch the round once on fresh
+                # capacity; if that exhausts too, signal the caller to
+                # take a plain gradient step this iteration.
+                _telemetry(clock).metrics.counter(
+                    "newton.fault_fallbacks").inc()
+                floor = max(1, math.ceil(
+                    cfg.survivor_floor * scfg.num_blocks))
+                surv = np.asarray(e.mask)
+                if int(surv.sum()) >= floor:
+                    survivors = jnp.asarray(surv)
+                else:
+                    try:
+                        survivors = run(
+                            scfg.total_blocks, "k_of_n",
+                            name=tag + "/retry",
+                            rkey=jax.random.fold_in(key, 13),
+                            min_start=float(clock.time), **kw)
+                    except PhaseExhaustedError as e2:
+                        surv2 = np.asarray(e2.mask)
+                        if int(surv2.sum()) < floor:
+                            return None, None
+                        survivors = jnp.asarray(surv2)
         state = fam.sample(jax.random.fold_in(key, 7), n_rows)
         tel = _telemetry(clock)
         if tel.enabled:
@@ -457,9 +622,18 @@ def _hessian_phase(objective, data: Dataset, w: jax.Array, cfg: NewtonConfig,
         workers = max(1, -(-n_rows // b)) * d_blocks * d_blocks
         policy = ("speculative" if cfg.hessian_policy == "exact_speculative"
                   else "wait_all")
-        mem = _phase_mem(cfg.phase_memory,
-                         scheduler.sketch_worker_bytes(b, min(d, b)))
-        run(workers, policy, flops=block_flops, comm=0.05 * workers, mem=mem)
+        mem_bytes = scheduler.sketch_worker_bytes(b, min(d, b))
+        try:
+            run(workers, policy, flops=block_flops, comm=0.05 * workers,
+                mem=_phase_mem(cfg.phase_memory, mem_bytes),
+                ws=_ws_gb(mem_bytes))
+        except PhaseExhaustedError:
+            if cfg.fault_fallback == "raise":
+                raise
+            # Attempts billed; the exact product is deterministic, so the
+            # master's local recompute stands in for the lost round.
+            _telemetry(clock).metrics.counter(
+                "newton.fault_fallbacks").inc()
     return _jitted_exact_hessian(objective)(w, data), None
 
 
@@ -499,31 +673,55 @@ def _distavg_direction_phase(objective, data: Dataset, w: jax.Array,
         gram_flops = 2.0 * scfg.block_size * d * d
         solve_flops = (d ** 3 / 3.0 if cfg.distavg_solver == "chol"
                        else 2.0 * cfg.cg_iters * d * d)   # cg matvecs
-        mem = _phase_mem(cfg.phase_memory,
-                         scheduler.distavg_worker_bytes(scfg.block_size, d))
-        if dag is not None:
-            sk = dag.dispatch(scheduler.PhaseSpec(
-                name=f"{tag}-sketch", workers=scfg.total_blocks,
-                policy="k_of_n", k=scfg.num_blocks,
-                flops_per_worker=apply_flops + gram_flops,
-                comm_units=0.01 * scfg.total_blocks, memory_gb=mem),
-                key=key)
-            survivors = sk.mask
-            deps = (f"{tag}-sketch",) + \
-                ((grad_dep,) if grad_dep is not None else ())
-            dag.dispatch(scheduler.PhaseSpec(
-                name=f"{tag}-solve", workers=scfg.num_blocks,
-                policy="wait_all", flops_per_worker=solve_flops,
-                comm_units=0.01 * scfg.num_blocks, memory_gb=mem,
-                deps=deps), key=jax.random.fold_in(key, 11))
-        else:
-            _, mask = clock.phase(key, scfg.total_blocks, policy="k_of_n",
-                                  k=scfg.num_blocks,
-                                  flops_per_worker=(apply_flops + gram_flops
-                                                    + solve_flops),
-                                  comm_units=0.01 * scfg.total_blocks,
-                                  memory_gb=mem, phase_name=tag)
-            survivors = mask
+        mem_bytes = scheduler.distavg_worker_bytes(scfg.block_size, d)
+        mem = _phase_mem(cfg.phase_memory, mem_bytes)
+        ws = _ws_gb(mem_bytes)
+        try:
+            if dag is not None:
+                sk = dag.dispatch(scheduler.PhaseSpec(
+                    name=f"{tag}-sketch", workers=scfg.total_blocks,
+                    policy="k_of_n", k=scfg.num_blocks,
+                    flops_per_worker=apply_flops + gram_flops,
+                    comm_units=0.01 * scfg.total_blocks, memory_gb=mem,
+                    working_set_gb=ws), key=key)
+                survivors = sk.mask
+                # An exhausted gradient phase never registers with the
+                # DAG; keep only edges to phases that actually exist and
+                # let the barrier at the current clock stand in for the
+                # missing one (same convention as GIANT's chain).
+                want = (f"{tag}-sketch",) + \
+                    ((grad_dep,) if grad_dep is not None else ())
+                deps = tuple(dd for dd in want if dd in dag.results)
+                dag.dispatch(scheduler.PhaseSpec(
+                    name=f"{tag}-solve", workers=scfg.num_blocks,
+                    policy="wait_all", flops_per_worker=solve_flops,
+                    comm_units=0.01 * scfg.num_blocks, memory_gb=mem,
+                    working_set_gb=ws, deps=deps),
+                    key=jax.random.fold_in(key, 11),
+                    sequential=len(deps) < len(want))
+            else:
+                _, mask = clock.phase(key, scfg.total_blocks,
+                                      policy="k_of_n",
+                                      k=scfg.num_blocks,
+                                      flops_per_worker=(apply_flops
+                                                        + gram_flops
+                                                        + solve_flops),
+                                      comm_units=0.01 * scfg.total_blocks,
+                                      memory_gb=mem, working_set_gb=ws,
+                                      phase_name=tag)
+                survivors = mask
+        except PhaseExhaustedError as e:
+            if cfg.fault_fallback == "raise":
+                raise
+            # Exhausted retry budget: every attempt is billed; the
+            # finite-finisher mask stands in for the k-of-n survivors
+            # (per-block directions are independently unbiased, so the
+            # average over fewer blocks just carries more variance — the
+            # caller's descent guard backstops a zero-survivor round).
+            _telemetry(clock).metrics.counter(
+                "newton.fault_fallbacks").inc()
+            if e.mask.shape == (scfg.total_blocks,):
+                survivors = jnp.asarray(e.mask)
     state = fam.sample(jax.random.fold_in(key, 7), n_rows)
     fn = _jitted_distavg_direction(objective, fam, cfg.debias,
                                    cfg.use_kernels, cfg.distavg_solver,
@@ -551,6 +749,11 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
         raise ValueError(f"unknown schedule {cfg.schedule!r}")
     if cfg.adaptive_metric not in ("stall", "mp"):
         raise ValueError(f"unknown adaptive_metric {cfg.adaptive_metric!r}")
+    if cfg.fault_fallback not in ("degrade", "raise"):
+        raise ValueError(f"unknown fault_fallback {cfg.fault_fallback!r}")
+    if not 0.0 < cfg.survivor_floor <= 1.0:
+        raise ValueError(
+            f"survivor_floor must be in (0, 1], got {cfg.survivor_floor}")
     if (cfg.adaptive_sketch and cfg.adaptive_metric == "mp"
             and (cfg.sketch_mode != "blocks"
                  or cfg.hessian_policy != "oversketch")):
@@ -577,7 +780,8 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
         clock = straggler.SimClock(model) if model is not None else None
     engine = CodedMatvecEngine(data, cfg.coded_block_rows, model,
                                overlap_encode=cfg.overlap_encode,
-                               phase_memory=cfg.phase_memory)
+                               phase_memory=cfg.phase_memory,
+                               corruption_detection=cfg.corruption_detection)
 
     w = jnp.asarray(w0, jnp.float32)
     hist: Dict[str, List[float]] = {k: [] for k in (
@@ -652,10 +856,27 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
         else:
             h_hat, m_eff = _hessian_phase(objective, data, w, cfg, kh,
                                           clock, dag=dag)
-            p = _solve_direction(objective, h_hat, g, cfg)
-            if cfg.debias and m_eff is not None:
-                p = sketching.debias_direction(p, p.shape[0], m_eff)
-            hg = None
+            if h_hat is None:
+                # Fault degradation: the sketch round (and its re-dispatch)
+                # lost too many blocks — take a plain gradient step, with
+                # hg = g (H = I) keeping the weakly-convex search coherent.
+                p, hg = -g, g
+                tel.metrics.counter("newton.gradient_fallbacks").inc()
+            else:
+                p = _solve_direction(objective, h_hat, g, cfg)
+                if cfg.debias and m_eff is not None:
+                    p = sketching.debias_direction(p, p.shape[0], m_eff)
+                hg = None
+
+        # Descent guard: whatever produced p (a starved sketch, a debias
+        # factor driven past zero by casualties, a corrupted Hessian
+        # estimate that slipped through), only a finite descent direction
+        # may reach the line search — anything else degrades to steepest
+        # descent instead of diverging.
+        gp = float(jnp.vdot(g, p))
+        if not math.isfinite(gp) or gp >= 0.0:
+            p, hg = -g, g
+            tel.metrics.counter("newton.safeguard_fallbacks").inc()
 
         # --- 4. distributed line search (Sec. 3.2) --------------------------
         if cfg.unit_step:
@@ -672,24 +893,36 @@ def oversketched_newton(objective, data: Dataset, w0: jax.Array,
             nb = max(1, data.x.shape[0] // max(cfg.coded_block_rows, 1))
             ls_flops = 2.0 * cfg.coded_block_rows * data.x.shape[1] * \
                 len(cfg.candidates)
-            ls_mem = _phase_mem(cfg.phase_memory, scheduler.matvec_worker_bytes(
-                cfg.coded_block_rows, data.x.shape[1]))
-            if dag is not None:
-                # The line search consumes p, i.e. every phase so far; by
-                # then the clock already sits at the DAG's frontier, so it
-                # dispatches on the engine's exact sequential path.  The
-                # edges are still declared (sequential dispatch ignores
-                # them for timing) so the recorded DAG joins here and the
-                # critical-path walk can cross the line search.
-                dag.dispatch(scheduler.PhaseSpec(
-                    name="linesearch", workers=nb, policy="wait_all",
-                    flops_per_worker=ls_flops, comm_units=0.5,
-                    memory_gb=ls_mem, deps=tuple(dag.results)),
-                    key=kl, sequential=True)
-            else:
-                clock.phase(kl, nb, policy="wait_all",
-                            flops_per_worker=ls_flops, comm_units=0.5,
-                            memory_gb=ls_mem, phase_name="linesearch")
+            ls_bytes = scheduler.matvec_worker_bytes(
+                cfg.coded_block_rows, data.x.shape[1])
+            ls_mem = _phase_mem(cfg.phase_memory, ls_bytes)
+            try:
+                if dag is not None:
+                    # The line search consumes p, i.e. every phase so far;
+                    # by then the clock already sits at the DAG's frontier,
+                    # so it dispatches on the engine's exact sequential
+                    # path.  The edges are still declared (sequential
+                    # dispatch ignores them for timing) so the recorded
+                    # DAG joins here and the critical-path walk can cross
+                    # the line search.
+                    dag.dispatch(scheduler.PhaseSpec(
+                        name="linesearch", workers=nb, policy="wait_all",
+                        flops_per_worker=ls_flops, comm_units=0.5,
+                        memory_gb=ls_mem, working_set_gb=_ws_gb(ls_bytes),
+                        deps=tuple(dag.results)),
+                        key=kl, sequential=True)
+                else:
+                    clock.phase(kl, nb, policy="wait_all",
+                                flops_per_worker=ls_flops, comm_units=0.5,
+                                memory_gb=ls_mem,
+                                working_set_gb=_ws_gb(ls_bytes),
+                                phase_name="linesearch")
+            except PhaseExhaustedError:
+                if cfg.fault_fallback == "raise":
+                    raise
+                # Billed, lost: the search objective values are master-side
+                # math, so the chosen step survives the dead fan-out.
+                tel.metrics.counter("newton.fault_fallbacks").inc()
 
         w = w + step * p
 

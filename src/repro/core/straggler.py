@@ -120,11 +120,12 @@ class SimClock:
 
     def __init__(self, model: StragglerModel, time: float = 0.0, *,
                  fleet=None, cost=None, recorder=None, replay=None,
-                 pool=None, telemetry=None):
+                 pool=None, telemetry=None, faults=None):
         from repro.runtime import FleetEngine   # lazy: runtime imports us
         self.engine = FleetEngine(model, fleet=fleet, cost=cost,
                                   recorder=recorder, replay=replay,
-                                  pool=pool, telemetry=telemetry)
+                                  pool=pool, telemetry=telemetry,
+                                  faults=faults)
         if time:
             self.engine.seconds += float(time)
 
@@ -149,6 +150,13 @@ class SimClock:
         """The attached ``obs.Telemetry`` (or the zero-overhead no-op)."""
         return self.engine.telemetry
 
+    @property
+    def last_corruption(self):
+        """Boolean per-worker corruption flags of the most recent phase
+        (None unless a fault plan with a ``CorruptionSpec`` is attached) —
+        the coded-matvec layer turns these into parity-detected erasures."""
+        return self.engine.last_corruption
+
     def charge(self, elapsed: float, phase_name=None) -> None:
         """Directly add externally-computed phase time (e.g. the coded
         master's wait-until-decodable simulation)."""
@@ -162,18 +170,22 @@ class SimClock:
               decodable=None,
               not_before: Optional[float] = None,
               memory_gb: Optional[float] = None,
+              working_set_gb: Optional[float] = None,
               phase_name: Optional[str] = None,
               phase_deps: Tuple[str, ...] = ()) -> Tuple[float, jax.Array]:
         """Simulate one phase; returns (elapsed, finished_mask).
 
         ``not_before`` (absolute simulated seconds) overlaps this phase
         with whatever advanced the clock since that time; ``memory_gb``
-        bills it at its own Lambda size; ``phase_name``/``phase_deps``
-        label the phase's telemetry span — see ``FleetEngine.run_phase``."""
+        bills it at its own Lambda size; ``working_set_gb`` declares the
+        true per-worker working set (the fault plane's OOM threshold);
+        ``phase_name``/``phase_deps`` label the phase's telemetry span —
+        see ``FleetEngine.run_phase``."""
         elapsed, mask = self.engine.run_phase(
             key, num_workers, work_per_worker=work_per_worker,
             flops_per_worker=flops_per_worker, policy=policy, k=k,
             comm_units=comm_units, decodable=decodable,
             not_before=not_before, memory_gb=memory_gb,
+            working_set_gb=working_set_gb,
             phase_name=phase_name, phase_deps=phase_deps)
         return elapsed, jnp.asarray(mask)

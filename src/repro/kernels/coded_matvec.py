@@ -7,6 +7,12 @@ to keep it at streaming bandwidth with VMEM-tiled row blocks and to avoid a
 separate masking pass over the output.
 
 Grid: (W, s_tiles) with the reduction over the vector innermost.
+
+``parity_residuals`` is the kernel's master-side companion: one fused
+masked pass over the (g+1, g+1, b) product grid computing every row/column
+single-parity-check residual at once — the corruption detector's inner
+loop (``core.coded.detect_corrupted``), kept here with the worker kernel
+because both are the per-phase hot path over the same coded layout.
 """
 from __future__ import annotations
 
@@ -59,3 +65,28 @@ def coded_block_matvec(enc: jax.Array, x: jax.Array, erased: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((w, b), jnp.float32),
         interpret=interpret,
     )(erased, enc.astype(jnp.float32), x.astype(jnp.float32))
+
+
+@jax.jit
+def parity_residuals(products: jax.Array, known: jax.Array):
+    """Per-line parity-check residuals of a coded product grid.
+
+    products: ((g+1), (g+1), b) block products (erased cells arbitrary);
+    known: ((g+1), (g+1)) bool arrival mask.  Every row and column of the
+    extended grid satisfies sum(systematic) - parity = 0, so over known
+    cells the signed line sums are exact-zero residual vectors unless a
+    known cell's value is corrupted.  Returns ``(row_res, row_mag,
+    col_res, col_mag)``: the L2 residual of each line's constraint and
+    the L2 magnitude of the line's known values (the relative-tolerance
+    scale).  Unknown cells contribute zero to both, so the caller must
+    gate on line completeness — a line with a missing cell has no
+    checkable constraint.
+    """
+    n = products.shape[0]
+    sgn = jnp.where(jnp.arange(n) == n - 1, -1.0, 1.0)
+    vals = jnp.where(known[..., None], products, 0.0).astype(jnp.float32)
+    row_res = jnp.linalg.norm(jnp.einsum("c,rcb->rb", sgn, vals), axis=-1)
+    col_res = jnp.linalg.norm(jnp.einsum("r,rcb->cb", sgn, vals), axis=-1)
+    row_mag = jnp.sqrt((vals ** 2).sum(axis=(1, 2)))
+    col_mag = jnp.sqrt((vals ** 2).sum(axis=(0, 2)))
+    return row_res, row_mag, col_res, col_mag

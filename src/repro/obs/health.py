@@ -254,6 +254,13 @@ def default_rules() -> Tuple[Rule, ...]:
         # Warm-pool hit rate collapse (per-phase gauge from the engine).
         Rule("pool.hit_rate", lambda: Cusum(k=0.5, h=6.0, min_samples=6,
                                             abs_floor=0.05)),
+        # Coded-matvec corruption rate (per-phase gauge from the coded
+        # engine whenever a fault plan's CorruptionSpec is attached; 0.0
+        # on clean phases, so the baseline is exact and any sustained
+        # corruption drifts the CUSUM up).  Unit of drift: 2% of blocks.
+        Rule("coded.block_error_rate", lambda: Cusum(k=0.5, h=6.0,
+                                                     min_samples=6,
+                                                     abs_floor=0.02)),
     )
 
 

@@ -22,6 +22,7 @@ from repro import obs, scheduler
 from repro.core import solvers, straggler
 from repro.core.objectives import Dataset
 from repro.optim.gradient_coding import gradient_coding_phase
+from repro.runtime.faults import PhaseExhaustedError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,8 +112,12 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
     # Hessian-vector products over the local shard per iteration.
     newton_flops = 2.0 * per * d * cfg.cg_iters
     # Both stages stream the same (per x d) shard; CG adds a few d-vectors.
-    shard_mem = (scheduler.lambda_memory_gb(
-        scheduler.matvec_worker_bytes(per, d)) if cfg.phase_memory else None)
+    shard_bytes = scheduler.matvec_worker_bytes(per, d)
+    shard_mem = (scheduler.lambda_memory_gb(shard_bytes)
+                 if cfg.phase_memory else None)
+    # True working set, declared unconditionally: inert billing-wise, but
+    # an attached fault plan with an OomSpec kills undersized attempts.
+    shard_ws = float(shard_bytes) / 2.0 ** 30
     for t in range(cfg.iters):
         key, k1, k2, k3 = jax.random.split(key, 4)
         it_span = tel.trace.begin(
@@ -122,21 +127,34 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
                if cfg.schedule == "dag" and clock is not None else None)
 
         def phase(k, name, deps, *, policy, kk=None, flops, comm):
-            if dag is not None:
-                # Every dep here is the previous stage — the chain resolves
-                # to the engine's exact sequential path.  A dep that ran on
-                # the direct clock (the gcode round) has no DAG node; the
-                # barrier at the current clock stands in for its edge.
-                known = tuple(dd for dd in deps if dd in dag.results)
-                return dag.dispatch(scheduler.PhaseSpec(
-                    name=name, workers=cfg.num_workers, policy=policy, k=kk,
-                    flops_per_worker=flops, comm_units=comm,
-                    memory_gb=shard_mem, deps=known), key=k,
-                    sequential=len(known) < len(deps)).mask
-            _, mask = clock.phase(k, cfg.num_workers, policy=policy, k=kk,
-                                  flops_per_worker=flops, comm_units=comm,
-                                  memory_gb=shard_mem, phase_name=name)
-            return mask
+            try:
+                if dag is not None:
+                    # Every dep here is the previous stage — the chain
+                    # resolves to the engine's exact sequential path.  A
+                    # dep that ran on the direct clock (the gcode round)
+                    # has no DAG node; the barrier at the current clock
+                    # stands in for its edge.
+                    known = tuple(dd for dd in deps if dd in dag.results)
+                    return dag.dispatch(scheduler.PhaseSpec(
+                        name=name, workers=cfg.num_workers, policy=policy,
+                        k=kk, flops_per_worker=flops, comm_units=comm,
+                        memory_gb=shard_mem, working_set_gb=shard_ws,
+                        deps=known), key=k,
+                        sequential=len(known) < len(deps)).mask
+                _, mask = clock.phase(k, cfg.num_workers, policy=policy,
+                                      k=kk, flops_per_worker=flops,
+                                      comm_units=comm, memory_gb=shard_mem,
+                                      working_set_gb=shard_ws,
+                                      phase_name=name)
+                return mask
+            except PhaseExhaustedError as e:
+                # Fault plan exhausted the retry budget: attempts are
+                # billed, the dead shards' results never arrive.  GIANT's
+                # stages both average shard-local quantities, so the
+                # finite-finisher mask gives honest drop semantics (the
+                # "ignore" policy's math, forced by the fleet).
+                tel.metrics.counter("giant.exhausted_phases").inc()
+                return jnp.asarray(e.mask)
 
         # --- stage 1: gradient -------------------------------------------
         shard_sizes = wts.sum(axis=1)
@@ -155,8 +173,11 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
                                           cfg.gcode_redundancy,
                                           flops_per_worker=grad_flops)
                 else:
-                    phase(k1, "grad", (), policy="wait_all",
-                          flops=grad_flops, comm=1.0)
+                    # wait_all's mask is all-True on a healthy fleet; under
+                    # an exhausted fault plan it is the finite-finisher
+                    # mask and the dead shards drop out of the average.
+                    fin = phase(k1, "grad", (), policy="wait_all",
+                                flops=grad_flops, comm=1.0)
         g_locals = lg(xs, ys, wts, w)
         finf = fin.astype(jnp.float32)
         weights = finf * shard_sizes
@@ -172,8 +193,9 @@ def giant(objective, data: Dataset, w0: jax.Array, cfg: GiantConfig,
         else:
             fin2 = jnp.ones((cfg.num_workers,), bool)
             if clock is not None:
-                phase(k2, "local-newton", ("grad",), policy="wait_all",
-                      flops=newton_flops, comm=1.0)
+                fin2 = phase(k2, "local-newton", ("grad",),
+                             policy="wait_all", flops=newton_flops,
+                             comm=1.0)
         p_locals = ln(xs, ys, wts, w, g)
         fin2f = fin2.astype(jnp.float32)
         p = -(fin2f[:, None] * p_locals).sum(0) / jnp.maximum(fin2f.sum(), 1.0)

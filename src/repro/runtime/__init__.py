@@ -11,10 +11,16 @@ constants, and the trace JSONL schema.
 """
 from repro.runtime.cost import CostLedger, CostModel, bill_phase
 from repro.runtime.engine import FleetConfig, FleetEngine
+from repro.runtime.faults import (BurstSpec, CorruptionSpec, FaultPlan,
+                                  OomSpec, PhaseExhaustedError,
+                                  PoolDeathSpec, S3Spec, ThrottleSpec,
+                                  available_scenarios, get_scenario,
+                                  register_scenario)
 from repro.runtime.policies import (PhaseContext, PhaseOutcome,
                                     available_policies, get_policy,
                                     register_policy)
 from repro.runtime.trace import (TraceRecorder, TraceReplayer,
+                                 calibrate_faults_from_trace,
                                  calibrate_fleet_from_trace,
                                  calibrate_from_times, calibrate_from_trace,
                                  load_trace)
@@ -22,8 +28,12 @@ from repro.runtime.trace import (TraceRecorder, TraceReplayer,
 __all__ = [
     "CostLedger", "CostModel", "bill_phase",
     "FleetConfig", "FleetEngine",
+    "BurstSpec", "CorruptionSpec", "FaultPlan", "OomSpec",
+    "PhaseExhaustedError", "PoolDeathSpec", "S3Spec", "ThrottleSpec",
+    "available_scenarios", "get_scenario", "register_scenario",
     "PhaseContext", "PhaseOutcome", "available_policies", "get_policy",
     "register_policy",
-    "TraceRecorder", "TraceReplayer", "calibrate_fleet_from_trace",
+    "TraceRecorder", "TraceReplayer", "calibrate_faults_from_trace",
+    "calibrate_fleet_from_trace",
     "calibrate_from_times", "calibrate_from_trace", "load_trace",
 ]

@@ -86,13 +86,23 @@ def bill_phase(cost: CostModel, attempts, successes: int,
 
     ``attempts`` is an iterable of (launch_time, end_time) pairs — every
     Lambda invocation of the phase, including failed tries, policy
-    relaunches, and losers of k-of-n races (they run to completion).
+    relaunches, and losers of k-of-n races (they run to completion).  An
+    attempt may instead be a (launch, end, mem_scale) triple: it billed at
+    ``mem_scale`` times the phase's Lambda size (OOM-escalated retries
+    from the fault plane run on bigger instances).
     """
     attempts = list(attempts)
-    billed = sum(max(0.0, end - launch) for launch, end in attempts)
+    billed = 0.0      # unscaled GB-second base (same sum order as ever)
+    scaled = 0.0      # memory-escalated attempts, pre-multiplied by scale
+    for a in attempts:
+        dur = max(0.0, a[1] - a[0])
+        if len(a) > 2 and a[2] != 1.0:
+            scaled += a[2] * dur
+        else:
+            billed += dur
     n_attempts = len(attempts)
     return CostLedger(
-        gb_seconds=cost.memory_gb * billed,
+        gb_seconds=cost.memory_gb * billed + cost.memory_gb * scaled,
         invocations=float(n_attempts),
         s3_puts=(cost.puts_per_success * successes
                  + cost.puts_per_comm_unit * comm_units),

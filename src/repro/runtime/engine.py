@@ -50,7 +50,9 @@ import numpy as np
 
 from repro import obs
 from repro.runtime import policies as _policies
+from repro.runtime import trace as _trace_mod
 from repro.runtime.cost import CostLedger, CostModel, bill_phase
+from repro.runtime.faults import FaultPlan, PhaseExhaustedError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,10 +68,17 @@ class FleetConfig:
     cold_start_lo: float = 0.5     # cold-start delay bounds, seconds
     cold_start_hi: float = 2.0
     failure_rate: float = 0.0      # P[attempt dies mid-run]
-    max_retries: int = 3           # retry at this index always succeeds
+    max_retries: int = 3           # retry budget per worker
     retry_backoff: float = 0.05    # master detection + relaunch delay
     watch_fraction: float = 0.9    # speculative policy watch deadline
     hedge_quantile: float = 0.8    # hedged policy duplicate launch point
+    # fail_open=True (the historical semantics): the attempt at index
+    # ``max_retries`` cannot die — the master relaunches until the result
+    # lands, so a phase always completes.  fail_open=False makes the budget
+    # real: a worker whose final attempt dies is EXHAUSTED (its result
+    # never arrives, every attempt still bills) and a phase that cannot
+    # terminate without it raises ``faults.PhaseExhaustedError``.
+    fail_open: bool = True
 
 
 def _np_rng(key: jax.Array) -> np.random.Generator:
@@ -87,7 +96,8 @@ class FleetEngine:
 
     def __init__(self, model, fleet: Optional[FleetConfig] = None,
                  cost: Optional[CostModel] = None,
-                 recorder=None, replay=None, pool=None, telemetry=None):
+                 recorder=None, replay=None, pool=None, telemetry=None,
+                 faults: Optional[FaultPlan] = None):
         self.model = model
         self.fleet = fleet if fleet is not None else FleetConfig()
         self.cost_model = cost if cost is not None else CostModel()
@@ -100,6 +110,15 @@ class FleetEngine:
         # Telemetry is pure observation: it draws no randomness and never
         # moves the clock, so attaching it cannot change (seconds, dollars).
         self.telemetry = telemetry if telemetry is not None else obs.NULL
+        # runtime.faults.FaultPlan: deterministic chaos injected into every
+        # phase.  All fault randomness comes from a generator folded from
+        # the phase key and the plan's seed, never from ``rng`` — a run
+        # with faults=None draws exactly the historical stream.
+        self.faults = faults
+        # Per-worker corruption flags of the most recent phase (None unless
+        # the plan has a CorruptionSpec); the coded-matvec layer reads this.
+        self.last_corruption: Optional[np.ndarray] = None
+        self._pool_death_done = False
         self._phase_idx = 0
 
     # ------------------------------------------------------------- totals
@@ -127,27 +146,50 @@ class FleetEngine:
     # ----------------------------------------------------- lifecycle core
     def _lifecycle(self, key: jax.Array, rng: np.random.Generator,
                    num_workers: int, work_per_worker: float,
-                   flops_per_worker: Optional[float], t0: float = 0.0
-                   ) -> Tuple[np.ndarray, List[Tuple[float, float]], int,
-                              dict]:
+                   flops_per_worker: Optional[float], t0: float = 0.0, *,
+                   frng: Optional[np.random.Generator] = None,
+                   eff_memory_gb: float = 0.0,
+                   working_set_gb: Optional[float] = None
+                   ) -> Tuple[np.ndarray, List[tuple], int, dict]:
         """Event-driven per-worker lifecycle: cold start -> running ->
-        done | failed-with-retry.  Returns (completion_times, attempts,
-        successes, stats); ``attempts`` are (launch, end) pairs for billing
-        and ``stats`` carries retries / cold-start telemetry for the trace.
+        done | killed-with-retry | exhausted.  Returns (completion_times,
+        attempts, successes, stats); ``attempts`` are (launch, end) pairs —
+        or (launch, end, mem_scale) triples for OOM-escalated attempts —
+        for billing, and ``stats`` carries retries / cold-start / injected-
+        fault telemetry for the trace.
 
         ``t0`` is the phase's absolute launch time — the warm pool (when
         attached) is consulted at ``t0 + event_time``, so overlapped and
         bursty schedules see the pool as it stands at their true launch
-        instant."""
+        instant.  ``frng`` (present iff a FaultPlan is active) feeds every
+        injected-fault draw; the base ``rng`` stream is untouched, so a
+        plan-less run is bit-identical to the pre-chaos engine.
+
+        An attempt can die three ways — OOM (deterministic, when the
+        effective Lambda size is below ``working_set_gb``), a correlated
+        burst hit, or the i.i.d. failure coin; the earliest death wins.
+        Under ``fail_open`` the attempt at index ``max_retries`` is immune
+        (the historical always-succeeds semantics); otherwise a death at
+        the final attempt leaves the worker EXHAUSTED: ``done[w]`` stays
+        inf and every attempt still bills."""
         fl = self.fleet
+        fp = self.faults if frng is not None else None
         round_times: dict = {}
         stats = {"retries": 0, "warm": 0, "cold": 0,
-                 "cold_delays": []}   # type: dict
+                 "cold_delays": [], "exhausted": 0}   # type: dict
         # Per-attempt lifecycle records for the span tracer, collected only
         # when telemetry is live (the trace recorder never reads this key).
         events_out = [] if self.telemetry.enabled else None
         if events_out is not None:
             stats["events"] = events_out
+        fstats = None
+        if fp is not None:
+            fstats = {"burst_kills": 0, "burst_exposed": 0, "throttled": 0,
+                      "s3_get_retries": 0, "s3_put_retries": 0,
+                      "oom_kills": 0, "oom_escalations": 0,
+                      "pool_killed": 0, "peak_concurrency": 0,
+                      "throttle_waits": []}
+            stats["faults"] = fstats
 
         def duration(worker: int, attempt: int) -> float:
             # One jax sample round per retry wave, lazily — the common
@@ -161,14 +203,34 @@ class FleetEngine:
             return float(round_times[attempt][worker])
 
         done = np.full(num_workers, np.inf)
-        attempts: List[Tuple[float, float]] = []
+        attempts: List[tuple] = []
         successes = 0
-        events: list = []   # (time, seq, worker, attempt)
+        mem_scale = np.ones(num_workers)   # >1 only after OOM escalation
+        running: list = []  # end-times heap of admitted in-flight attempts
+        th = fp.throttle if fp is not None else None
+        s3 = fp.s3 if fp is not None else None
+        events: list = []   # (time, seq, worker, attempt, backoff_tries)
         for w in range(num_workers):
-            heapq.heappush(events, (0.0, w, w, 0))
+            heapq.heappush(events, (0.0, w, w, 0, 0))
         seq = num_workers
         while events:
-            t, _, w, attempt = heapq.heappop(events)
+            t, _, w, attempt, tries = heapq.heappop(events)
+            if th is not None:
+                while running and running[0] <= t:
+                    heapq.heappop(running)
+                if (th.t_start <= t0 + t < th.t_end
+                        and len(running) >= th.max_concurrent):
+                    # Rejected by the concurrency cap: re-queue after
+                    # exponential backoff + jitter.  The rejected request
+                    # is still billed as an invocation (run_phase adds it).
+                    wait = (th.backoff * th.backoff_mult ** tries
+                            + frng.uniform(0.0, th.jitter))
+                    fstats["throttled"] += 1
+                    fstats["throttle_waits"].append(float(wait))
+                    heapq.heappush(events,
+                                   (t + wait, seq, w, attempt, tries + 1))
+                    seq += 1
+                    continue
             if self.pool is not None:
                 # Warm-pool model: cold exactly when no unexpired container
                 # is free at the attempt's absolute launch time.
@@ -183,31 +245,103 @@ class FleetEngine:
                 stats["cold_delays"].append(float(t_cold))
             elif self.pool is not None:
                 stats["warm"] += 1
+            # S3 input GET transients: seeded retries delay the run start
+            # (and bill extra GETs via run_phase).
+            t_get = 0.0
+            if (s3 is not None and s3.get_fail_prob > 0.0
+                    and s3.t_start <= t0 + t < s3.t_end):
+                for i in range(s3.max_tries):
+                    if frng.random() >= s3.get_fail_prob:
+                        break
+                    t_get += s3.retry_delay * (2.0 ** i)
+                    fstats["s3_get_retries"] += 1
             run = duration(w, attempt)
-            fails = (attempt < fl.max_retries and fl.failure_rate > 0.0
-                     and rng.random() < fl.failure_rate)
-            if fails:
-                # Dies partway through; master notices and relaunches.
-                t_fail = t + t_cold + rng.uniform(0.05, 0.95) * run
-                attempts.append((t, t_fail))
-                stats["retries"] += 1
+            start = t + t_cold + t_get
+            # What kills this attempt, if anything — the earliest death
+            # wins.  Under fail_open the final attempt is immune.
+            final = fl.fail_open and attempt >= fl.max_retries
+            t_die = math.inf
+            cause = None
+            oomspec = fp.oom if fp is not None else None
+            if (not final and oomspec is not None
+                    and working_set_gb is not None
+                    and eff_memory_gb * mem_scale[w] < working_set_gb):
+                t_die = start + oomspec.kill_at_fraction * run
+                cause = "oom"
+            b = fp.burst if fp is not None else None
+            if (not final and b is not None and b.kill_fraction > 0.0
+                    and t0 + start < b.t_end
+                    and t0 + start + run > b.t_start):
+                fstats["burst_exposed"] += 1
+                if frng.random() < b.kill_fraction:
+                    # The whole zone goes down at t_start: every attempt
+                    # already running dies at that instant, later launches
+                    # die on arrival — correlated, not i.i.d.
+                    t_hit = max(start, b.t_start - t0)
+                    if t_hit < t_die:
+                        t_die, cause = t_hit, "burst"
+            if (not final and fl.failure_rate > 0.0
+                    and rng.random() < fl.failure_rate):
+                t_fail = start + rng.uniform(0.05, 0.95) * run
+                if t_fail < t_die:
+                    t_die, cause = t_fail, "fail"
+            if cause is not None:
+                attempts.append(
+                    (t, t_die) if mem_scale[w] == 1.0
+                    else (t, t_die, float(mem_scale[w])))
+                if cause == "fail":
+                    stats["retries"] += 1
+                elif cause == "burst":
+                    fstats["burst_kills"] += 1
+                else:
+                    fstats["oom_kills"] += 1
                 if events_out is not None:
-                    events_out.append((w, attempt, t, t_cold, t_fail, False))
+                    events_out.append((w, attempt, t, t_cold, t_die, False))
                 if self.pool is not None:
                     # A function error does not tear the container down.
-                    self.pool.release(t0 + t_fail)
-                heapq.heappush(
-                    events, (t_fail + fl.retry_backoff, seq, w, attempt + 1))
-                seq += 1
+                    self.pool.release(t0 + t_die)
+                if th is not None:
+                    heapq.heappush(running, t_die)
+                    fstats["peak_concurrency"] = max(
+                        fstats["peak_concurrency"], len(running))
+                if attempt < fl.max_retries:
+                    if cause == "oom" and oomspec.escalate:
+                        # Retry at doubled memory (billed at that size).
+                        mem_scale[w] = min(
+                            mem_scale[w] * 2.0,
+                            max(1.0, oomspec.max_memory_gb / eff_memory_gb))
+                        fstats["oom_escalations"] += 1
+                    heapq.heappush(events, (t_die + fl.retry_backoff, seq,
+                                            w, attempt + 1, 0))
+                    seq += 1
+                else:
+                    # Retry budget truly exhausted (fail_open=False): the
+                    # result never arrives; every attempt above billed.
+                    stats["exhausted"] += 1
             else:
-                end = t + t_cold + run
-                attempts.append((t, end))
+                end = start + run
+                # S3 output PUT transients: the worker lingers retrying
+                # (billed for the longer run + the extra PUTs).
+                if (s3 is not None and s3.put_fail_prob > 0.0
+                        and s3.t_start <= t0 + end < s3.t_end):
+                    for i in range(s3.max_tries):
+                        if frng.random() >= s3.put_fail_prob:
+                            break
+                        end += s3.retry_delay * (2.0 ** i)
+                        fstats["s3_put_retries"] += 1
+                attempts.append(
+                    (t, end) if mem_scale[w] == 1.0
+                    else (t, end, float(mem_scale[w])))
                 successes += 1
                 done[w] = end
                 if events_out is not None:
                     events_out.append((w, attempt, t, t_cold, end, True))
                 if self.pool is not None:
                     self.pool.release(t0 + end)
+                if th is not None:
+                    heapq.heappush(running, end)
+                    fstats["peak_concurrency"] = max(
+                        fstats["peak_concurrency"], len(running))
         return done, attempts, successes, stats
 
     # ---------------------------------------------------------- telemetry
@@ -280,6 +414,16 @@ class FleetEngine:
         m.counter("fleet.retries").inc(stats["retries"])
         m.counter("fleet.cold_starts").inc(stats["cold"])
         m.counter("fleet.warm_hits").inc(stats["warm"])
+        for kind, v in (stats.get("faults") or {}).items():
+            # One counter per injected-event kind; healthy (plan-less)
+            # runs emit nothing here, so existing metric streams and the
+            # default health rules are untouched.
+            if kind == "peak_concurrency" and v:
+                m.gauge("fault.peak_concurrency").set(int(v))
+            elif kind != "throttle_waits" and v:
+                m.counter(f"fault.{kind}").inc(int(v))
+        if stats.get("exhausted"):
+            m.counter("fault.exhausted_workers").inc(stats["exhausted"])
         for d in stats["cold_delays"]:
             m.histogram("worker.cold_delay_s").observe(d)
         if self.pool is not None:
@@ -301,6 +445,7 @@ class FleetEngine:
                   decodable: Optional[Callable[[np.ndarray], bool]] = None,
                   not_before: Optional[float] = None,
                   memory_gb: Optional[float] = None,
+                  working_set_gb: Optional[float] = None,
                   phase_name: Optional[str] = None,
                   phase_deps: Tuple[str, ...] = ()
                   ) -> Tuple[float, np.ndarray]:
@@ -322,7 +467,10 @@ class FleetEngine:
 
         ``memory_gb`` bills this phase at its own Lambda size (a per-phase
         ``CostModel.memory_gb`` override, recorded in the trace row);
-        None bills at the fleet-wide default.
+        None bills at the fleet-wide default.  ``working_set_gb`` declares
+        the phase's true per-worker working set (``scheduler.sizing``) —
+        inert unless a FaultPlan with an ``OomSpec`` is attached, in which
+        case attempts whose effective memory is below it are OOM-killed.
 
         ``phase_name`` / ``phase_deps`` are telemetry-only annotations
         (span name + recorded dependency edges for critical-path
@@ -331,11 +479,15 @@ class FleetEngine:
         """
         tel = self.telemetry
         if self.replay is not None:
-            elapsed, mask, entry, advance = self.replay.next_phase(
+            elapsed, mask, entry, advance, row = self.replay.next_phase(
                 policy=policy, num_workers=num_workers)
             t_end = self.seconds + advance
             self.seconds = t_end
             self.ledger.add(entry)
+            corrupted_hex = (row.get("faults") or {}).get("corrupted")
+            self.last_corruption = (
+                None if corrupted_hex is None
+                else _trace_mod._mask_from_hex(corrupted_hex, num_workers))
             if tel.enabled:
                 # An overlapped recorded phase (advance < elapsed) started
                 # before the pre-phase clock; recover its true interval.
@@ -344,12 +496,44 @@ class FleetEngine:
                     t_end - elapsed, elapsed, policy, num_workers, k,
                     entry, None, None, replayed=True)
             self._phase_idx += 1
+            if row.get("raised"):
+                # The recording exhausted here; re-raise so the replayed
+                # algorithm takes the same degradation path.
+                if tel.enabled:
+                    tel.metrics.counter("fleet.exhausted_phases").inc()
+                raise PhaseExhaustedError(
+                    phase_name or self._phase_idx - 1, num_workers,
+                    mask, elapsed)
             return elapsed, mask
 
         rng = _np_rng(key)
+        fp = self.faults
+        frng = None
+        if fp is not None and fp.active():
+            # Dedicated fault stream: folded from the phase key AND the
+            # plan seed, so injected chaos is reproducible per phase and
+            # the base lifecycle stream is exactly the plan-less one.
+            frng = _np_rng(jax.random.fold_in(key, 99991 + fp.seed))
         t0 = float(self.seconds if not_before is None else not_before)
+        pool_killed = 0
+        if (fp is not None and fp.pool_death is not None
+                and self.pool is not None and not self._pool_death_done
+                and t0 >= fp.pool_death.t):
+            # The provider reclaimed a fraction of the idle containers;
+            # applied once, at the first phase launching at or after t.
+            pool_killed = self.pool.cull(
+                fp.pool_death.fraction,
+                np.random.default_rng(fp.seed + 0xDEAD))
+            self._pool_death_done = True
+        eff_memory_gb = float(self.cost_model.memory_gb
+                              if memory_gb is None else memory_gb)
         done, attempts, successes, stats = self._lifecycle(
-            key, rng, num_workers, work_per_worker, flops_per_worker, t0)
+            key, rng, num_workers, work_per_worker, flops_per_worker, t0,
+            frng=frng, eff_memory_gb=eff_memory_gb,
+            working_set_gb=working_set_gb)
+        fstats = stats.get("faults")
+        if fstats is not None:
+            fstats["pool_killed"] = pool_killed
 
         relaunch_cache: dict = {}
 
@@ -371,6 +555,26 @@ class FleetEngine:
                 if fl.failure_rate > 0.0:
                     run = np.where(rng.random(num_workers) < fl.failure_rate,
                                    np.inf, run)
+                if frng is not None:
+                    # Relaunches share the injected chaos: a burst window
+                    # covering this phase kills duplicates with the same
+                    # correlated coin, and an active concurrency cap
+                    # serializes their admission (each batch of
+                    # ``max_concurrent`` duplicates waits one more backoff
+                    # + jitter step).  Extra draws come from the fault
+                    # stream only — the plan-less stream stays identical.
+                    b = fp.burst
+                    if (b is not None and b.kill_fraction > 0.0
+                            and b.t_start <= t0 < b.t_end):
+                        run = np.where(
+                            frng.random(num_workers) < b.kill_fraction,
+                            np.inf, run)
+                    th = fp.throttle
+                    if th is not None and th.t_start <= t0 < th.t_end:
+                        waves = np.arange(num_workers) // th.max_concurrent
+                        run = run + waves * (
+                            th.backoff
+                            + frng.uniform(0.0, th.jitter, num_workers))
                 relaunch_cache["r"] = run
             return relaunch_cache["r"]
 
@@ -380,15 +584,34 @@ class FleetEngine:
             decodable=decodable, sample_relaunch=sample_relaunch)
         outcome = _policies.get_policy(policy)(done, ctx)
 
-        elapsed = float(outcome.elapsed
-                        + self.model.comm_per_unit * comm_units)
-        all_attempts = attempts + list(outcome.extra_attempts)
+        raised = not math.isfinite(float(outcome.elapsed))
+        if raised:
+            # The policy cannot terminate without an exhausted worker's
+            # result.  The master stops at the last lifecycle event it
+            # observed; everything that ran still bills, the partial phase
+            # is recorded, and a typed error surfaces the survivors.
+            mask = np.isfinite(done)
+            elapsed = float(max((a[1] for a in attempts), default=0.0))
+            extra_attempts = [e for e in outcome.extra_attempts
+                              if math.isfinite(e[1])]
+        else:
+            mask = np.asarray(outcome.mask, dtype=bool)
+            elapsed = float(outcome.elapsed
+                            + self.model.comm_per_unit * comm_units)
+            extra_attempts = list(outcome.extra_attempts)
+        all_attempts = attempts + extra_attempts
         cost_model = (self.cost_model if memory_gb is None else
                       dataclasses.replace(self.cost_model,
                                           memory_gb=float(memory_gb)))
         entry = bill_phase(cost_model, all_attempts,
                            successes + outcome.extra_successes,
                            comm_units)
+        if fstats is not None:
+            # Throttle rejections bill control-plane invocations; S3
+            # transients bill the extra ops their retries issued.
+            entry.invocations += float(fstats["throttled"])
+            entry.s3_gets += float(fstats["s3_get_retries"])
+            entry.s3_puts += float(fstats["s3_put_retries"])
         if cost_model.billing == "reserved":
             # Fixed cluster: every node bills the phase's wall-clock
             # (idle-behind-the-straggler time included), not its own work.
@@ -400,11 +623,21 @@ class FleetEngine:
             advance = max(0.0, float(not_before) + elapsed - self.seconds)
         self.seconds += advance
         self.ledger.add(entry)
+        corrupted = None
+        if fp is not None and fp.corruption is not None:
+            c = fp.corruption
+            u = frng.random(num_workers)
+            abs_done = t0 + done
+            corrupted = (np.isfinite(done) & (abs_done >= c.t_start)
+                         & (abs_done < c.t_end) & (u < c.prob))
+        self.last_corruption = corrupted
         if tel.enabled:
             self._phase_telemetry(
                 phase_name or f"phase{self._phase_idx}", phase_deps, t0,
                 elapsed, policy, num_workers, k, entry, stats,
-                list(outcome.extra_attempts), cost_model=cost_model)
+                extra_attempts, cost_model=cost_model)
+            if raised:
+                tel.metrics.counter("fleet.exhausted_phases").inc()
         if self.recorder is not None:
             # free_at, not len(): lazy TTL expiry means the raw pool still
             # holds containers no launch at the current clock could use.
@@ -412,9 +645,14 @@ class FleetEngine:
                          if self.pool is not None else None)
             self.recorder.record_phase(
                 self._phase_idx, policy=policy, num_workers=num_workers,
-                k=k, elapsed=elapsed, mask=np.asarray(outcome.mask, bool),
+                k=k, elapsed=elapsed, mask=mask,
                 entry=entry, worker_times=done, advance=advance,
                 memory_gb=None if memory_gb is None else float(memory_gb),
-                stats=stats, pool_free=pool_free)
+                stats=stats, pool_free=pool_free, corrupted=corrupted,
+                raised=raised)
         self._phase_idx += 1
-        return elapsed, np.asarray(outcome.mask, dtype=bool)
+        if raised:
+            raise PhaseExhaustedError(
+                phase_name or self._phase_idx - 1, num_workers, mask,
+                elapsed)
+        return elapsed, mask

@@ -118,14 +118,29 @@ def _relaunch_outstanding(times: np.ndarray, deadline: float,
 
 @register_policy("speculative")
 def speculative(times: np.ndarray, ctx: PhaseContext) -> PhaseOutcome:
+    # Deadline over the FINITE arrivals only: an exhausted worker (time
+    # inf, fail_open=False) never arrives, so the watcher's order
+    # statistic must not wait on it — with every time finite this is
+    # exactly the historical np.sort(times)[k-1].
     k = max(1, int(np.floor(ctx.watch_fraction * times.shape[0])))
-    return _relaunch_outstanding(times, float(np.sort(times)[k - 1]), ctx)
+    finite = times[np.isfinite(times)]
+    if finite.size == 0:
+        deadline = 0.0
+    else:
+        deadline = float(np.sort(finite)[min(k, finite.size) - 1])
+    return _relaunch_outstanding(times, deadline, ctx)
 
 
 @register_policy("hedged")
 def hedged(times: np.ndarray, ctx: PhaseContext) -> PhaseOutcome:
     """Duplicate every request still outstanding at the hedge deadline."""
-    deadline = float(np.quantile(times, ctx.hedge_quantile))
+    finite = times[np.isfinite(times)]
+    if finite.size == 0:
+        deadline = 0.0
+    else:
+        # Quantile of the finite arrivals (identical to the historical
+        # all-times quantile when nothing exhausted).
+        deadline = float(np.quantile(finite, ctx.hedge_quantile))
     return _relaunch_outstanding(times, deadline, ctx)
 
 
@@ -140,6 +155,11 @@ def coded_decode(times: np.ndarray, ctx: PhaseContext) -> PhaseOutcome:
     order = np.argsort(times, kind="stable")
     k_min = ctx.k if ctx.k is not None else 1
     for k in range(max(1, k_min), n + 1):
+        if not np.isfinite(times[order[k - 1]]):
+            # The prefix has run out of arrivals (exhausted workers sort
+            # last): no decodable set exists — fall through to the
+            # wait-all outcome, whose inf elapsed surfaces the exhaustion.
+            break
         mask = np.zeros(n, dtype=bool)
         mask[order[:k]] = True
         if ctx.decodable is None or ctx.decodable(mask):

@@ -25,6 +25,24 @@ unchanged and v1 readers ignore the new keys):
     phase — what ``calibrate_fleet_from_trace`` fits a ``FleetConfig``
     (failure rate, cold-start probability and bounds) from.
 
+Schema v3 (chaos-era, again strictly additive => v1/v2 traces replay
+unchanged and default recordings stay byte-identical — the new keys only
+appear when a ``runtime.faults.FaultPlan`` injected something or a retry
+budget exhausted):
+
+  - ``faults``: per-phase injected-event counts — any non-zero subset of
+    ``burst_kills`` / ``burst_exposed`` / ``throttled`` /
+    ``s3_get_retries`` / ``s3_put_retries`` / ``oom_kills`` /
+    ``oom_escalations`` / ``pool_killed`` / ``peak_concurrency``, plus
+    ``corrupted`` (hex mask of silently-wrong results) and, under
+    ``lifecycle=True``, the drawn ``throttle_waits`` —
+    ``calibrate_faults_from_trace`` fits a ``FaultPlan`` back from these.
+  - ``exhausted``: how many workers' retry budgets truly ran out
+    (``FleetConfig.fail_open=False``).
+  - ``raised``: the phase terminated in ``PhaseExhaustedError``; replay
+    re-raises after applying the recorded partial time and cost, so a
+    replayed algorithm takes the same degradation path.
+
 ``worker_times`` (opt-in, ``TraceRecorder(worker_times=True)``) stores the
 per-worker completion times of each phase; ``calibrate_from_trace`` fits a
 ``StragglerModel`` to their empirical shape (median base, lognormal body
@@ -72,7 +90,9 @@ class TraceRecorder:
                      advance: Optional[float] = None,
                      memory_gb: Optional[float] = None,
                      stats: Optional[dict] = None,
-                     pool_free: Optional[int] = None) -> None:
+                     pool_free: Optional[int] = None,
+                     corrupted: Optional[np.ndarray] = None,
+                     raised: bool = False) -> None:
         row = {"kind": "phase", "phase": phase, "policy": policy,
                "workers": int(num_workers), "k": k,
                "elapsed": float(elapsed), "mask": _mask_to_hex(mask)}
@@ -92,6 +112,21 @@ class TraceRecorder:
         if self.lifecycle and stats is not None:
             row["retries"] = int(stats["retries"])
             row["cold_delays"] = [float(t) for t in stats["cold_delays"]]
+        # Schema v3: injected-event record, keys only when events happened
+        # (a plan-less run writes none of this — byte-identical to v2).
+        faults = dict(stats.get("faults") or {}) if stats else {}
+        waits = faults.pop("throttle_waits", None)
+        frow = {kk: int(v) for kk, v in faults.items() if v}
+        if self.lifecycle and waits:
+            frow["throttle_waits"] = [float(t) for t in waits]
+        if corrupted is not None and corrupted.any():
+            frow["corrupted"] = _mask_to_hex(corrupted)
+        if frow:
+            row["faults"] = frow
+        if stats and stats.get("exhausted"):
+            row["exhausted"] = int(stats["exhausted"])
+        if raised:
+            row["raised"] = True
         row.update(entry.as_dict())
         if self.worker_times and worker_times is not None:
             row["worker_times"] = [float(t) for t in worker_times]
@@ -128,7 +163,7 @@ class TraceReplayer:
         return row
 
     def next_phase(self, *, policy: str, num_workers: int
-                   ) -> Tuple[float, np.ndarray, CostLedger, float]:
+                   ) -> Tuple[float, np.ndarray, CostLedger, float, dict]:
         row = self._next("phase")
         if row["policy"] != policy or row["workers"] != num_workers:
             raise ValueError(
@@ -139,7 +174,7 @@ class TraceReplayer:
                            invocations=row["invocations"],
                            s3_puts=row["s3_puts"], s3_gets=row["s3_gets"])
         return (row["elapsed"], _mask_from_hex(row["mask"], num_workers),
-                entry, row.get("advance", row["elapsed"]))
+                entry, row.get("advance", row["elapsed"]), row)
 
     def next_charge(self) -> float:
         return self._next("charge")["elapsed"]
@@ -252,3 +287,55 @@ def calibrate_fleet_from_trace(path) -> "FleetConfig":
         lo, hi = dflt.cold_start_lo, dflt.cold_start_hi
     return FleetConfig(failure_rate=failure_rate, cold_start_prob=cold_prob,
                        cold_start_lo=lo, cold_start_hi=hi)
+
+
+def calibrate_faults_from_trace(path) -> "FaultPlan":
+    """Fit a ``runtime.faults.FaultPlan`` to a schema-v3 fault trace.
+
+    The inverse of injection, for the knobs a trace identifies:
+
+      - burst ``kill_fraction``: burst kills / burst-exposed attempts —
+        each exposed attempt flips the same seeded coin, so the ratio is
+        the maximum-likelihood estimate of the coin.
+      - throttle ``max_concurrent``: the max recorded ``peak_concurrency``
+        over rows where rejections actually happened — a saturated
+        admission heap sits exactly at the cap.
+      - throttle ``backoff``: the smallest recorded wait (first-rejection
+        waits are ``backoff + U[0, jitter)``, so the min over many waits
+        converges on ``backoff`` from above; needs ``lifecycle=True``
+        rows).
+      - S3 ``get_fail_prob``: GET retries / (launches + GET retries) —
+        every try fails independently, so failures over total tries is
+        again the ML estimate.
+
+    Windows and seeds are not identifiable from counts alone and come
+    back as the estimators' all-time defaults.
+    """
+    from repro.runtime.faults import (BurstSpec, FaultPlan, S3Spec,
+                                      ThrottleSpec)
+    with open(path) as f:
+        rows = [json.loads(line) for line in f if line.strip()]
+    frows = [(r, r["faults"]) for r in rows
+             if r.get("kind") == "phase" and r.get("faults")]
+    if not frows:
+        raise ValueError(f"no fault rows in {path}; record a run with a "
+                         "FaultPlan attached")
+    kills = sum(f.get("burst_kills", 0) for _, f in frows)
+    exposed = sum(f.get("burst_exposed", 0) for _, f in frows)
+    burst = (BurstSpec(kill_fraction=kills / exposed) if exposed else None)
+    throttle = None
+    peaks = [f["peak_concurrency"] for _, f in frows
+             if f.get("throttled") and f.get("peak_concurrency")]
+    if peaks:
+        waits = [w for _, f in frows for w in f.get("throttle_waits", ())]
+        kw = {"max_concurrent": int(max(peaks))}
+        if waits:
+            kw["backoff"] = float(min(waits))
+        throttle = ThrottleSpec(**kw)
+    s3 = None
+    get_retries = sum(f.get("s3_get_retries", 0) for _, f in frows)
+    if get_retries:
+        launches = sum(int(r["workers"]) + int(r.get("retries", 0))
+                       for r, _ in frows)
+        s3 = S3Spec(get_fail_prob=get_retries / (launches + get_retries))
+    return FaultPlan(burst=burst, throttle=throttle, s3=s3)

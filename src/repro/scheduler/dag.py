@@ -131,6 +131,7 @@ class DagRun:
             comm_units=spec.comm_units, decodable=spec.decodable,
             not_before=None if nb == now else nb,
             memory_gb=spec.memory_gb,
+            working_set_gb=spec.working_set_gb,
             phase_name=spec.name, phase_deps=spec.deps)
         finish = float(self.clock.time) if nb == now else nb + elapsed
         res = PhaseResult(spec=spec, start=nb, elapsed=float(elapsed),

@@ -83,6 +83,22 @@ class WarmPool:
         if self.capacity is not None and len(self._free) > self.capacity:
             del self._free[0]   # LRU evict: the longest-idle container
 
+    def cull(self, fraction: float, rng) -> int:
+        """Kill a seeded random ``fraction`` of the idle containers — the
+        fault plane's container-death event (the provider reclaimed them
+        out from under the tenant).  In-flight containers are unaffected;
+        they die with their attempt's own fault, not here.  Returns how
+        many containers were culled."""
+        n = len(self._free)
+        k = int(round(float(fraction) * n))
+        if k <= 0:
+            return 0
+        idx = rng.choice(n, size=k, replace=False)
+        for i in sorted(idx, reverse=True):
+            del self._free[i]
+        self.killed = getattr(self, "killed", 0) + k
+        return k
+
     # ------------------------------------------------------------- inspect
     def snapshot(self, t: float) -> dict:
         """Telemetry-friendly state: cumulative hit/miss counters plus the

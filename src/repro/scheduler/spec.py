@@ -39,6 +39,12 @@ class PhaseSpec:
     # Declared per-worker working set -> Lambda size for billing this phase.
     # None = the fleet-wide CostModel.memory_gb (the paper's fixed 3 GB).
     memory_gb: Optional[float] = None
+    # The phase's TRUE per-worker working set in GB (scheduler.sizing,
+    # before headroom/rounding).  Inert unless a fault plan with an
+    # OomSpec is attached to the engine: attempts billed below this are
+    # then OOM-killed — undersizing memory_gb becomes a failure mode, not
+    # just a discount.
+    working_set_gb: Optional[float] = None
     deps: Tuple[str, ...] = ()
     decodable: Optional[Callable] = None
 
@@ -49,6 +55,9 @@ class PhaseSpec:
             raise ValueError(f"phase {self.name!r}: workers must be >= 1")
         if self.memory_gb is not None and self.memory_gb <= 0:
             raise ValueError(f"phase {self.name!r}: memory_gb must be > 0")
+        if self.working_set_gb is not None and self.working_set_gb <= 0:
+            raise ValueError(
+                f"phase {self.name!r}: working_set_gb must be > 0")
         object.__setattr__(self, "deps", tuple(self.deps))
 
     @property

@@ -23,10 +23,22 @@ sized run (rows carry ``memory_gb``, ``pool``, ``retries``/``cold_delays``
 and an overlapped phase's ``advance``) — and the v1 fixture above is the
 standing proof that pre-v2 traces replay unchanged.
 
+A third fixture, ``chaos_trace_golden.jsonl``, pins the chaos-era schema
+v3: the same schedule shape recorded under a FULL fault plan (correlated
+burst, concurrency throttle, S3 transients, silent corruption) with
+lifecycle detail on.  Its rows carry the additive ``faults`` object —
+kills, throttle rejections and waits, S3 retries, the ``corrupted`` hex
+mask — and the v1/v2 fixtures above are the standing proof that pre-v3
+traces replay unchanged.  Crucially the REPLAY clock gets no fault plan
+at all: everything needed to reproduce a chaotic run bit-for-bit lives
+in the trace.  A fourth contract rides along: ``calibrate_faults_from_-
+trace`` must recover the plan's identifiable knobs from the fixture.
+
 Regenerate (only after an INTENTIONAL engine/trace-format change):
 
     PYTHONPATH=src python tests/test_golden_trace.py --regen
     PYTHONPATH=src python tests/test_golden_trace.py --regen-dag
+    PYTHONPATH=src python tests/test_golden_trace.py --regen-chaos
 """
 import json
 import pathlib
@@ -35,15 +47,29 @@ import jax
 import pytest
 
 from repro.core.straggler import SimClock, StragglerModel
-from repro.runtime import (CostLedger, CostModel, FleetConfig, TraceRecorder,
-                           TraceReplayer, calibrate_from_trace)
+from repro.runtime import (BurstSpec, CorruptionSpec, CostLedger, CostModel,
+                           FaultPlan, FleetConfig, S3Spec, ThrottleSpec,
+                           TraceRecorder, TraceReplayer,
+                           calibrate_faults_from_trace, calibrate_from_trace)
 from repro.scheduler import PhaseSpec, WarmPool, run_dag
 
 FIXTURE = pathlib.Path(__file__).parent / "fixtures" / \
     "fleet_trace_golden.jsonl"
 DAG_FIXTURE = pathlib.Path(__file__).parent / "fixtures" / \
     "dag_trace_golden.jsonl"
+CHAOS_FIXTURE = pathlib.Path(__file__).parent / "fixtures" / \
+    "chaos_trace_golden.jsonl"
 _FLEET = FleetConfig(failure_rate=0.15, cold_start_prob=0.25)
+_CHAOS_FLEET = FleetConfig(failure_rate=0.1, cold_start_prob=0.2)
+#: Every fault axis at once, knobs picked so each one demonstrably fires
+#: on the 16-worker schedule below (kills inside the window, >10
+#: concurrent launches, fat S3 retry chains, a few corrupted results).
+_CHAOS_PLAN = FaultPlan(
+    burst=BurstSpec(t_start=0.3, t_end=1.5, kill_fraction=0.5),
+    throttle=ThrottleSpec(max_concurrent=10),
+    s3=S3Spec(get_fail_prob=0.3, put_fail_prob=0.15),
+    corruption=CorruptionSpec(prob=0.15),
+    seed=7)
 
 
 def _drive(clock):
@@ -83,6 +109,21 @@ def _dag_pool():
     return WarmPool(ttl=20.0, prewarmed=4)
 
 
+def _drive_chaos(clock):
+    """The golden chaos schedule: a wait_all fan-out that eats the burst
+    window and the throttle cap head-on, a partial-wait phase, a master
+    charge, and a hedged phase — all under ``fail_open`` (default), so
+    exhaustion degrades to partial masks rather than raising."""
+    clock.phase(jax.random.PRNGKey(10), 16, policy="wait_all",
+                flops_per_worker=3e5, comm_units=1.0)
+    clock.phase(jax.random.PRNGKey(11), 16, policy="k_of_n", k=13,
+                flops_per_worker=3e5, comm_units=1.0)
+    clock.charge(0.1)
+    clock.phase(jax.random.PRNGKey(12), 12, policy="hedged",
+                flops_per_worker=2e5)
+    return clock
+
+
 def _load(fixture=FIXTURE):
     rows = [json.loads(line) for line in fixture.read_text().splitlines()
             if line.strip()]
@@ -111,14 +152,16 @@ def _assert_replay_matches_raw_rows(drive, rows):
     assert replayed.dollars == ledger.dollars(CostModel())
 
 
-def _assert_rerecord_matches(drive, rec, meta, rows, tmp_path, pool=None):
+def _assert_rerecord_matches(drive, rec, meta, rows, tmp_path, pool=None,
+                             fleet=_FLEET, faults=None):
     """Re-drive ``drive`` live into ``rec``: the record -> replay round
     trip must be bit-identical in any version, the schedule structure must
     always match the committed ``rows``, and under the fixture's jax
     version the rows must be IDENTICAL (json round-trip normalizes float
-    repr, mask hex, advance fields)."""
-    live = drive(SimClock(StragglerModel(), fleet=_FLEET, recorder=rec,
-                          pool=pool))
+    repr, mask hex, advance fields).  Only the LIVE clock gets ``faults``
+    — the replay clock never needs the plan."""
+    live = drive(SimClock(StragglerModel(), fleet=fleet, recorder=rec,
+                          pool=pool, faults=faults))
     path = tmp_path / "rerecord.jsonl"
     rec.dump(path)
     from repro.runtime import load_trace
@@ -181,6 +224,55 @@ def test_dag_golden_fixture_fleet_calibrates():
     assert fleet.cold_start_hi >= fleet.cold_start_lo > 0.0
 
 
+# ------------------------------------------------- chaos-era fault fixture
+def test_chaos_golden_fixture_replays_bit_identical():
+    _, rows = _load(CHAOS_FIXTURE)
+    phase_rows = [r for r in rows if r["kind"] == "phase"]
+    assert all("faults" in r for r in phase_rows), \
+        "every phase of the chaos fixture must carry the v3 faults object"
+    seen = set()
+    for r in phase_rows:
+        seen.update(r["faults"])
+    # Each plan axis left its signature somewhere in the trace.
+    assert "burst_kills" in seen, "burst must have killed someone"
+    assert "throttled" in seen, "the concurrency cap must have rejected"
+    assert "s3_get_retries" in seen or "s3_put_retries" in seen
+    assert "corrupted" in seen, "corruption must have tainted a result"
+    # Replay needs NO fault plan: the drive below builds a plan-less clock.
+    _assert_replay_matches_raw_rows(_drive_chaos, rows)
+
+
+def test_chaos_golden_schedule_rerecord_matches_fixture(tmp_path):
+    meta, rows = _load(CHAOS_FIXTURE)
+    _assert_rerecord_matches(
+        _drive_chaos, TraceRecorder(worker_times=True, lifecycle=True),
+        meta, rows, tmp_path, fleet=_CHAOS_FLEET, faults=_CHAOS_PLAN)
+
+
+def test_chaos_golden_fixture_fault_calibration_round_trips():
+    """``calibrate_faults_from_trace`` recovers the plan's identifiable
+    knobs from the committed fixture — the chaos analogue of the
+    straggler/fleet calibrations above.  Windows and seeds are
+    unidentifiable from a trace; rates and the cap are."""
+    plan = calibrate_faults_from_trace(CHAOS_FIXTURE)
+    # The saturated launch heap sits exactly at the cap: exact recovery.
+    assert plan.throttle is not None
+    assert plan.throttle.max_concurrent == \
+        _CHAOS_PLAN.throttle.max_concurrent
+    # First-rejection waits are backoff + U[0, jitter): the minimum
+    # observed wait brackets the base backoff tightly from above.
+    assert _CHAOS_PLAN.throttle.backoff <= plan.throttle.backoff < \
+        _CHAOS_PLAN.throttle.backoff + _CHAOS_PLAN.throttle.jitter
+    # Rate estimators: small-sample, so loose factor-of-two brackets.
+    assert plan.burst is not None
+    assert 0.5 * _CHAOS_PLAN.burst.kill_fraction <= \
+        plan.burst.kill_fraction <= \
+        min(1.0, 2.0 * _CHAOS_PLAN.burst.kill_fraction)
+    assert plan.s3 is not None
+    assert 0.5 * _CHAOS_PLAN.s3.get_fail_prob <= plan.s3.get_fail_prob <= \
+        min(1.0, 2.0 * _CHAOS_PLAN.s3.get_fail_prob)
+
+
 # ------------------------------------------- telemetry is observation-only
 def _assert_telemetry_inert(drive, rows, *, want_phases):
     """Driving the golden schedule off the fixture with a LIVE telemetry
@@ -226,6 +318,16 @@ def test_dag_golden_fixture_replays_identically_with_telemetry():
         want_phases=sum(r["kind"] == "phase" for r in rows))
 
 
+def test_chaos_golden_fixture_replays_identically_with_telemetry():
+    """Replaying the CHAOTIC fixture under live health monitors stays
+    alert-silent too: replay reproduces totals, not per-worker fault
+    stats, so detectors see only the healthy-looking span stream."""
+    _, rows = _load(CHAOS_FIXTURE)
+    _assert_telemetry_inert(
+        _drive_chaos, rows,
+        want_phases=sum(r["kind"] == "phase" for r in rows))
+
+
 def _regen():
     rec = TraceRecorder(worker_times=True)
     _drive(SimClock(StragglerModel(), fleet=_FLEET, recorder=rec))
@@ -253,12 +355,28 @@ def _regen_dag():
     print(f"wrote {DAG_FIXTURE} ({len(rec.rows)} rows)")
 
 
+def _regen_chaos():
+    rec = TraceRecorder(worker_times=True, lifecycle=True)
+    _drive_chaos(SimClock(StragglerModel(), fleet=_CHAOS_FLEET,
+                          recorder=rec, faults=_CHAOS_PLAN))
+    CHAOS_FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+    with open(CHAOS_FIXTURE, "w") as f:
+        f.write(json.dumps({"kind": "meta", "jax_version": jax.__version__,
+                            "generator": "tests/test_golden_trace.py "
+                                         "--regen-chaos"}) + "\n")
+        for row in rec.rows:
+            f.write(json.dumps(row) + "\n")
+    print(f"wrote {CHAOS_FIXTURE} ({len(rec.rows)} rows)")
+
+
 if __name__ == "__main__":
     import sys
     if "--regen" in sys.argv:
         _regen()
     elif "--regen-dag" in sys.argv:
         _regen_dag()
+    elif "--regen-chaos" in sys.argv:
+        _regen_chaos()
     else:
         sys.exit("usage: python tests/test_golden_trace.py "
-                 "[--regen | --regen-dag]")
+                 "[--regen | --regen-dag | --regen-chaos]")
