@@ -41,6 +41,7 @@ PERSIST_JSON = {
     "fleet_bench": "BENCH_fleet.json",
     "kernels_bench": "BENCH_kernels.json",
     "scheduler_bench": "BENCH_fleet.json",
+    "tenancy_bench": "BENCH_fleet.json",
 }
 
 MODULES = [
@@ -56,6 +57,7 @@ MODULES = [
     "kernels_bench",
     "roofline",
     "scheduler_bench",
+    "tenancy_bench",
 ]
 
 
@@ -139,18 +141,34 @@ def main(argv=None) -> int:
             file_rel = PERSIST_JSON[mod_name]
             file_payload = payload
             prior_merge = written.get(file_rel)
+            path = REPO_ROOT / file_rel
+            if (prior_merge is None and path.exists()
+                    and sum(f == file_rel
+                            for f in PERSIST_JSON.values()) > 1):
+                # Shared BENCH file, first writer this invocation: seed
+                # the merge from the rows already on disk so a partial
+                # run (e.g. --only tenancy) keeps the other modules'
+                # rows instead of clobbering them.  Renamed/removed rows
+                # of THIS module are replaced wholesale by name below;
+                # stale rows only linger if a module itself is dropped.
+                try:
+                    prior_merge = json.loads(path.read_text())
+                except Exception:   # noqa: BLE001 — corrupt prior file
+                    prior_merge = None
             if prior_merge is not None:
-                # Another module already wrote this file in this
-                # invocation: merge by row name instead of clobbering.
+                # Another module already wrote this file (this invocation
+                # or a prior one): merge by row name instead of
+                # clobbering; meta.module tracks every contributor.
                 names = {r["name"] for r in rows}
+                prior_mods = prior_merge["meta"].get(
+                    "module", "unknown").split("+")
+                merged_mods = "+".join(
+                    [m for m in prior_mods if m != mod_name] + [mod_name])
                 file_payload = {
-                    "meta": {**payload["meta"],
-                             "module": (prior_merge["meta"]["module"]
-                                        + "+" + mod_name)},
+                    "meta": {**payload["meta"], "module": merged_mods},
                     "rows": [r for r in prior_merge["rows"]
                              if r["name"] not in names] + rows,
                 }
-            path = REPO_ROOT / file_rel
             if path.exists():
                 # Report-only noise-aware diff vs the file being replaced
                 # (CI gates via `repro.obs.diff --gate`; here we only warn).

@@ -1,0 +1,134 @@
+"""Multi-tenant frontier sweep: throughput vs latency vs dollars at scale.
+
+Every cell pushes the same seeded workload (1k jobs quick / 10k full,
+heterogeneous Newton/GIANT/matvec templates from ``repro.tenancy``)
+through one shared discrete-event fleet under a different platform
+policy, and reports the three axes the paper's economics live on —
+completed-jobs-per-second, job latency tail, and total dollars
+(provisioned-concurrency idle billing included):
+
+  - ``nopool_open``: no warm pool, admit everything — the baseline where
+    every phase pays i.i.d. cold-start odds and the platform is free of
+    provisioned cost.
+  - ``shared_pool``: one ``WarmPool`` shared by every tenant, statically
+    provisioned; idle reserve bills real provisioned-concurrency
+    GB-seconds.
+  - ``pool_aware``: same pool, plus slack-spending dispatch (delay an
+    off-critical-path phase within its CPM slack to land on warm
+    containers).
+  - ``autoscale``: empty reserve at t=0, arrival-rate autoscaler sizes it
+    (Little's-law target, EWMA-smoothed) — dollars follow load.
+  - ``slo_admission``: SLO-aware admission on top — infeasible jobs are
+    refused at arrival instead of admitted to fail.
+  - ``burst``: the whole workload arrives in ~1 simulated second — peak
+    in-flight concurrency ~= the full job count, the "thousands of
+    concurrent jobs" regime of the ROADMAP item.
+
+A final self-check row re-runs one policy cell twice and reports
+bit-identity of (seconds, dollars, warm/cold phase log) — the tenancy
+determinism contract, continuously measured.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import json_row
+from repro.core.straggler import SimClock, StragglerModel
+from repro.runtime import FleetConfig
+from repro.scheduler.pool import WarmPool
+from repro.tenancy import (AdmissionPolicy, Autoscaler, JobScheduler,
+                           TenancyConfig, WorkloadConfig,
+                           generate_workload)
+
+SEED = 0
+POOL_TTL = 120.0
+POOL_PREWARMED = 200
+#: Cold starts are real in every cell: without a pool each attempt flips
+#: this i.i.d. coin; with a pool the coin is replaced by actual container
+#: reuse — that substitution is the frontier being measured.
+FLEET = FleetConfig(cold_start_prob=0.3)
+
+#: Admit-everything policy for the open cells: the cap is never the
+#: binding constraint, so the frontier isolates pool + dispatch effects.
+OPEN = AdmissionPolicy(max_inflight=1_000_000, queue=True, slo_aware=False)
+
+
+def _drive(jobs, pool=None, config=TenancyConfig(admission=OPEN)):
+    clock = SimClock(StragglerModel(), fleet=FLEET, pool=pool)
+    sched = JobScheduler(clock, jax.random.PRNGKey(SEED), jobs, config)
+    return sched.run()
+
+
+def _row(name: str, wall_s: float, res, pool=None) -> dict:
+    s = res.summary()
+    warm_rate = 0.0
+    if pool is not None and (pool.warm_hits + pool.cold_starts):
+        warm_rate = pool.warm_hits / (pool.warm_hits + pool.cold_starts)
+    return json_row(
+        name, s["seconds"] * 1e6,
+        sim_s=s["seconds"], usd=s["dollars"],
+        jobs=s["jobs"], completed=s["completed"],
+        rejected=s["rejected"], slo_miss=s["slo_misses"],
+        throughput=s["throughput"], peak_inflight=s["peak_inflight"],
+        lat_p50=s["latency_p50"], lat_p95=s["latency_p95"],
+        prov_gb_s=s["provisioned_gb_seconds"], warm_rate=warm_rate,
+        wall_s=wall_s)
+
+
+def run(quick: bool = True):
+    n_jobs = 1_000 if quick else 10_000
+    rate = 60.0 if quick else 150.0
+    jobs = generate_workload(WorkloadConfig(seed=SEED, rate=rate,
+                                            n_jobs=n_jobs))
+    rows = []
+
+    def cell(name, pool=None, config=TenancyConfig(admission=OPEN)):
+        t0 = time.time()
+        res = _drive(jobs, pool=pool, config=config)
+        rows.append(_row(f"tenancy_{name}", time.time() - t0, res,
+                         pool=pool))
+        return res
+
+    cell("nopool_open")
+    cell("shared_pool", pool=WarmPool(ttl=POOL_TTL,
+                                      prewarmed=POOL_PREWARMED))
+    cell("pool_aware", pool=WarmPool(ttl=POOL_TTL,
+                                     prewarmed=POOL_PREWARMED),
+         config=TenancyConfig(admission=OPEN, pool_aware=True))
+    cell("autoscale", pool=WarmPool(ttl=POOL_TTL, prewarmed=0),
+         config=TenancyConfig(admission=OPEN, pool_aware=True,
+                              autoscaler=Autoscaler(max_provisioned=400)))
+    cell("slo_admission", pool=WarmPool(ttl=POOL_TTL,
+                                        prewarmed=POOL_PREWARMED),
+         config=TenancyConfig(
+             admission=AdmissionPolicy(max_inflight=256, queue=True,
+                                       slo_aware=True),
+             pool_aware=True))
+
+    # The "thousands of concurrent jobs" regime: the same job count
+    # compressed into ~1 simulated second of arrivals, open admission —
+    # peak_inflight approaches n_jobs.
+    burst = generate_workload(WorkloadConfig(seed=SEED, rate=float(n_jobs),
+                                             n_jobs=n_jobs))
+    burst_pool = WarmPool(ttl=POOL_TTL, prewarmed=POOL_PREWARMED)
+    t0 = time.time()
+    res = _drive(burst, pool=burst_pool)
+    rows.append(_row("tenancy_burst", time.time() - t0, res,
+                     pool=burst_pool))
+
+    # Determinism self-check: same seed + same trace, twice, smaller run
+    # (the contract is bit-identity, not speed).
+    small = generate_workload(WorkloadConfig(seed=SEED, rate=rate,
+                                             n_jobs=min(200, n_jobs)))
+    cfg = TenancyConfig(admission=OPEN, pool_aware=True)
+    a = _drive(small, pool=WarmPool(ttl=POOL_TTL, prewarmed=32),
+               config=cfg)
+    b = _drive(small, pool=WarmPool(ttl=POOL_TTL, prewarmed=32),
+               config=cfg)
+    exact = int(a.seconds == b.seconds and a.dollars == b.dollars
+                and a.phase_log == b.phase_log)
+    rows.append(json_row("tenancy_determinism", a.seconds * 1e6,
+                         sim_s=a.seconds, usd=a.dollars, exact=exact))
+    return rows

@@ -251,9 +251,14 @@ def default_rules() -> Tuple[Rule, ...]:
         # unit of drift "2 percentage points of debias".
         Rule("sketch.mp_debias", lambda: Cusum(k=0.5, h=6.0, min_samples=4,
                                                abs_floor=0.02)),
-        # Warm-pool hit rate collapse (per-phase gauge from the engine).
-        Rule("pool.hit_rate", lambda: Cusum(k=0.5, h=6.0, min_samples=6,
-                                            abs_floor=0.05)),
+        # Warm-pool hit rate collapse.  Watches the *per-phase* ratio
+        # (``pool.phase_hit_rate``), not the cumulative ``pool.hit_rate``:
+        # the cumulative gauge is smoothed by all prior phases, so a
+        # sudden collapse (container-death cull, tenant burst) barely
+        # moves it while the phase stream drops to zero immediately.
+        Rule("pool.phase_hit_rate", lambda: Cusum(k=0.5, h=6.0,
+                                                  min_samples=6,
+                                                  abs_floor=0.05)),
         # Coded-matvec corruption rate (per-phase gauge from the coded
         # engine whenever a fault plan's CorruptionSpec is attached; 0.0
         # on clean phases, so the baseline is exact and any sustained

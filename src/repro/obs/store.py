@@ -124,6 +124,18 @@ def run_record(name: str, telemetry, *, backend: str = "unknown",
     if cps:
         rec["critical_paths"] = cps
 
+    # Multi-tenant fleet aggregates (repro.tenancy): job latency tail +
+    # admission counters, present only when a JobScheduler drove the run.
+    lat = reg.histograms.get("job.latency_s")
+    if lat is not None and lat.count:
+        rec["fleet_jobs"] = {"latency": _tail_quantiles(lat),
+                             **{n.split(".", 1)[1]: c.value
+                                for n, c in sorted(reg.counters.items())
+                                if n.startswith("jobs.")}}
+        qw = reg.histograms.get("job.queue_wait_s")
+        if qw is not None and qw.count:
+            rec["fleet_jobs"]["queue_wait"] = _tail_quantiles(qw)
+
     # Measured kernel wall-clock per path/op (ops.set_profiler hook) —
     # the table a data-driven fused_path() router reads.
     kernel_us = {n: h.summary() for n, h in sorted(reg.histograms.items())

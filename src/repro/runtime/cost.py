@@ -17,6 +17,12 @@ prices; the *ratios* are what matter for scheme-vs-scheme comparisons):
     (paper Sec. 2): each attempt GETs its inputs and each *successful*
     attempt PUTs its output; per-phase `comm_units` add master-side traffic
     on the same meters.
+  - Provisioned concurrency: $4.1667e-6 per GB-second while a prewarmed
+    container sits idle (the real Lambda provisioned-concurrency price,
+    ~25% of the execution rate).  The ``WarmPool``'s pinned-warm reserve
+    bills this whether or not any job ever lands on it — the tenancy
+    scheduler accrues ``provisioned_gb_seconds`` as the integral of the
+    provisioned target over simulated time, times ``memory_gb``.
 
 ``CostModel`` is the frozen price sheet; ``CostLedger`` is the mutable
 accumulator a ``FleetEngine`` carries across phases.
@@ -46,13 +52,18 @@ class CostModel:
     # One master-side comm unit (the SimClock ``comm_units`` axis) in ops.
     gets_per_comm_unit: float = 1.0
     puts_per_comm_unit: float = 1.0
+    # Idle prewarmed (provisioned-concurrency) rate: billed per GB-second
+    # the pinned-warm reserve exists, independent of invocations.
+    usd_per_provisioned_gb_second: float = 4.1667e-6
 
     def dollars(self, gb_seconds: float, invocations: float,
-                s3_puts: float, s3_gets: float) -> float:
+                s3_puts: float, s3_gets: float,
+                provisioned_gb_seconds: float = 0.0) -> float:
         return (gb_seconds * self.usd_per_gb_second
                 + invocations * self.usd_per_invocation
                 + s3_puts * self.usd_per_s3_put
-                + s3_gets * self.usd_per_s3_get)
+                + s3_gets * self.usd_per_s3_get
+                + provisioned_gb_seconds * self.usd_per_provisioned_gb_second)
 
 
 @dataclasses.dataclass
@@ -63,21 +74,29 @@ class CostLedger:
     invocations: float = 0.0
     s3_puts: float = 0.0
     s3_gets: float = 0.0
+    provisioned_gb_seconds: float = 0.0
 
     def add(self, other: "CostLedger") -> None:
         self.gb_seconds += other.gb_seconds
         self.invocations += other.invocations
         self.s3_puts += other.s3_puts
         self.s3_gets += other.s3_gets
+        self.provisioned_gb_seconds += other.provisioned_gb_seconds
 
     def dollars(self, model: CostModel) -> float:
         return model.dollars(self.gb_seconds, self.invocations,
-                             self.s3_puts, self.s3_gets)
+                             self.s3_puts, self.s3_gets,
+                             self.provisioned_gb_seconds)
 
     def as_dict(self) -> dict:
-        return {"gb_seconds": self.gb_seconds,
-                "invocations": self.invocations,
-                "s3_puts": self.s3_puts, "s3_gets": self.s3_gets}
+        d = {"gb_seconds": self.gb_seconds,
+             "invocations": self.invocations,
+             "s3_puts": self.s3_puts, "s3_gets": self.s3_gets}
+        # Additive (trace schema v4): emitted only when nonzero so every
+        # pre-tenancy fixture row stays byte-identical.
+        if self.provisioned_gb_seconds:
+            d["provisioned_gb_seconds"] = self.provisioned_gb_seconds
+        return d
 
 
 def bill_phase(cost: CostModel, attempts, successes: int,

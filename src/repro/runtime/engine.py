@@ -430,11 +430,18 @@ class FleetEngine:
             m.gauge("pool.free").set(self.pool.free_at(self.seconds))
             m.gauge("pool.warm_hits_total").set(self.pool.warm_hits)
             m.gauge("pool.cold_starts_total").set(self.pool.cold_starts)
+            m.gauge("pool.killed_total").set(self.pool.killed)
             served = stats["warm"] + stats["cold"]
             if served:
-                # Per-phase hit rate — the stream the health monitors'
-                # pool-collapse detector watches.
-                m.gauge("pool.hit_rate").set(stats["warm"] / served)
+                # Per-phase hit rate — the spiky stream the health
+                # monitors' pool-collapse detector watches.
+                m.gauge("pool.phase_hit_rate").set(stats["warm"] / served)
+            total = self.pool.warm_hits + self.pool.cold_starts
+            if total:
+                # True cumulative rate from the pool's own counters —
+                # under a shared pool a tenant's phase ratio conflates
+                # its neighbours' churn; this one does not.
+                m.gauge("pool.hit_rate").set(self.pool.warm_hits / total)
 
     # ------------------------------------------------------------- phases
     def run_phase(self, key: jax.Array, num_workers: int, *,

@@ -43,6 +43,13 @@ budget exhausted):
     re-raises after applying the recorded partial time and cost, so a
     replayed algorithm takes the same degradation path.
 
+Schema v4 (tenancy-era, strictly additive):
+
+  - ``provisioned_gb_seconds``: idle provisioned-concurrency GB-seconds
+    billed into the phase's ledger entry (shared-pool prewarming under
+    ``repro.tenancy``).  Emitted only when nonzero, so single-job
+    recordings stay byte-identical to v1–v3 traces.
+
 ``worker_times`` (opt-in, ``TraceRecorder(worker_times=True)``) stores the
 per-worker completion times of each phase; ``calibrate_from_trace`` fits a
 ``StragglerModel`` to their empirical shape (median base, lognormal body
@@ -172,7 +179,11 @@ class TraceReplayer:
                 f"({policy!r}, {num_workers}) — not the same schedule")
         entry = CostLedger(gb_seconds=row["gb_seconds"],
                            invocations=row["invocations"],
-                           s3_puts=row["s3_puts"], s3_gets=row["s3_gets"])
+                           s3_puts=row["s3_puts"], s3_gets=row["s3_gets"],
+                           # Schema v4 (additive): idle provisioned-
+                           # concurrency GB-seconds, absent pre-tenancy.
+                           provisioned_gb_seconds=row.get(
+                               "provisioned_gb_seconds", 0.0))
         return (row["elapsed"], _mask_from_hex(row["mask"], num_workers),
                 entry, row.get("advance", row["elapsed"]), row)
 

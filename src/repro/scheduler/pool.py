@@ -22,6 +22,14 @@ burst pays cold starts the sequential schedule never sees.
   - Containers idle longer than ``ttl`` are expired lazily at the next
     acquire; ``capacity`` (optional) LRU-evicts beyond a pool-size cap.
 
+Prewarmed (provisioned) containers are *pinned to first use*: like
+provisioned concurrency they are kept warm by the provider and never TTL
+out while unused.  Once acquired they behave like any other container —
+released with an idle-since time and subject to TTL.  ``prewarm`` /
+``cool`` resize the provisioned set at runtime (the tenancy autoscaler's
+knob); the idle GB-seconds they bill are accounted by the caller (see
+``runtime/cost.py``).
+
 The pool is attached to a ``FleetEngine`` (``SimClock(..., pool=...)``) and
 consulted *instead of* the coin flip; the cold-start delay itself still
 comes from ``FleetConfig.cold_start_lo/hi``.  State mutates in dispatch
@@ -53,9 +61,14 @@ class WarmPool:
         self.ttl = float(ttl)
         self.capacity = capacity
         # Sorted idle-since times; entry i is a container free from _free[i].
-        self._free: List[float] = [0.0] * int(prewarmed)
+        self._free: List[float] = []
+        # Provisioned containers, pinned warm until first use: never in
+        # _free, so lazy TTL expiry cannot discard them before a late
+        # first dispatch.
+        self._fresh = int(prewarmed)
         self.warm_hits = 0
         self.cold_starts = 0
+        self.killed = 0
 
     # ------------------------------------------------------------ lifecycle
     def _expire(self, t: float) -> None:
@@ -68,10 +81,16 @@ class WarmPool:
         available (no cold start), False if the attempt starts cold."""
         t = float(t)
         self._expire(t)
-        # MRU: the container with the largest available_at <= t.
+        # MRU: the container with the largest available_at <= t.  Released
+        # containers outrank provisioned ones (which are idle "since 0"):
+        # hot containers stay hot, the provisioned reserve drains last.
         i = bisect.bisect_right(self._free, t) - 1
         if i >= 0:
             del self._free[i]
+            self.warm_hits += 1
+            return True
+        if self._fresh > 0:
+            self._fresh -= 1
             self.warm_hits += 1
             return True
         self.cold_starts += 1
@@ -80,8 +99,29 @@ class WarmPool:
     def release(self, t: float) -> None:
         """Return a container to the pool, idle from time ``t``."""
         bisect.insort(self._free, float(t))
-        if self.capacity is not None and len(self._free) > self.capacity:
-            del self._free[0]   # LRU evict: the longest-idle container
+        if (self.capacity is not None
+                and self._fresh + len(self._free) > self.capacity):
+            # LRU evict: the provisioned reserve is the longest-idle.
+            if self._fresh:
+                self._fresh -= 1
+            else:
+                del self._free[0]
+
+    def prewarm(self, k: int) -> None:
+        """Provision ``k`` more pinned-warm containers (autoscale up)."""
+        self._fresh += max(0, int(k))
+
+    def cool(self, k: int) -> int:
+        """Decommission up to ``k`` unused provisioned containers
+        (autoscale down); returns how many were actually removed."""
+        take = min(max(0, int(k)), self._fresh)
+        self._fresh -= take
+        return take
+
+    @property
+    def fresh(self) -> int:
+        """Provisioned containers still pinned warm (never used)."""
+        return self._fresh
 
     def cull(self, fraction: float, rng) -> int:
         """Kill a seeded random ``fraction`` of the idle containers — the
@@ -89,30 +129,62 @@ class WarmPool:
         out from under the tenant).  In-flight containers are unaffected;
         they die with their attempt's own fault, not here.  Returns how
         many containers were culled."""
-        n = len(self._free)
+        n = self._fresh + len(self._free)
         k = int(round(float(fraction) * n))
         if k <= 0:
             return 0
+        # Index space [0, _fresh) is the provisioned reserve, the rest maps
+        # onto _free — same sorted layout the single-list pool exposed.
         idx = rng.choice(n, size=k, replace=False)
+        fresh_killed = 0
         for i in sorted(idx, reverse=True):
-            del self._free[i]
-        self.killed = getattr(self, "killed", 0) + k
+            if i < self._fresh:
+                fresh_killed += 1
+            else:
+                del self._free[i - self._fresh]
+        self._fresh -= fresh_killed
+        self.killed += k
         return k
 
     # ------------------------------------------------------------- inspect
     def snapshot(self, t: float) -> dict:
-        """Telemetry-friendly state: cumulative hit/miss counters plus the
-        warm, unexpired container count a launch at ``t`` would see."""
+        """Telemetry-friendly state: cumulative hit/miss/kill counters plus
+        the warm, unexpired container count a launch at ``t`` would see."""
         return {"warm_hits": self.warm_hits,
                 "cold_starts": self.cold_starts,
-                "free": self.free_at(t), "containers": len(self._free)}
+                "killed": self.killed,
+                "free": self.free_at(t),
+                "containers": self._fresh + len(self._free)}
 
     def free_at(self, t: float) -> int:
         """How many warm, unexpired containers a launch at ``t`` could use."""
         t = float(t)
         lo = bisect.bisect_left(self._free, t - self.ttl)
         hi = bisect.bisect_right(self._free, t)
-        return max(0, hi - lo)
+        return max(0, hi - lo) + self._fresh
+
+    def earliest_fit(self, t: float, need: int, deadline: float) -> float:
+        """Earliest launch time in ``[t, deadline]`` at which the most of a
+        ``need``-container burst lands warm.  Candidates are the release
+        times of currently busy-until-then containers; returns ``t`` when
+        waiting gains nothing.  Pool-aware dispatch spends per-phase slack
+        (``obs.critical_path``) through this: delaying an off-critical-path
+        phase to a candidate returned here converts cold starts into warm
+        hits without moving the makespan."""
+        t = float(t)
+        deadline = float(deadline)
+        best_t, best_n = t, min(need, self.free_at(t))
+        if best_n >= need or deadline <= t:
+            return best_t
+        lo = bisect.bisect_right(self._free, t)
+        hi = bisect.bisect_right(self._free, deadline)
+        for cand in self._free[lo:hi]:
+            n = min(need, self.free_at(cand))
+            if n > best_n:
+                best_t, best_n = cand, n
+                if best_n >= need:
+                    break
+        return best_t
 
     def __len__(self) -> int:
-        return len(self._free)
+        return self._fresh + len(self._free)

@@ -1,0 +1,26 @@
+"""Multi-tenant fleet plane: workloads, shared-pool job scheduling, SLOs.
+
+Everything below PR 9's tenancy layer simulates ONE optimizer run at a
+time; this package simulates the *platform* — seeded Poisson /
+trace-driven arrivals of heterogeneous Newton/GIANT jobs
+(``workload``), a job-level scheduler sharing one ``scheduler.WarmPool``
+and one ``CostLedger`` across every concurrent run, SLO-aware admission,
+and an arrival-rate autoscaler for the billable provisioned-concurrency
+reserve (``scheduler``).  Deterministic end to end: same seed + same
+arrival trace => bit-identical warm/cold assignment, seconds, dollars.
+"""
+from repro.tenancy.scheduler import (AdmissionPolicy, Autoscaler,
+                                     FleetResult, JobRecord, JobScheduler,
+                                     TenancyConfig)
+from repro.tenancy.workload import (DEFAULT_MIX, Job, JobTemplate,
+                                    WorkloadConfig, available_templates,
+                                    generate_workload, get_template,
+                                    register, workload_from_trace)
+
+__all__ = [
+    "AdmissionPolicy", "Autoscaler", "FleetResult", "JobRecord",
+    "JobScheduler", "TenancyConfig",
+    "DEFAULT_MIX", "Job", "JobTemplate", "WorkloadConfig",
+    "available_templates", "generate_workload", "get_template",
+    "register", "workload_from_trace",
+]

@@ -458,7 +458,7 @@ def test_pool_death_fires_hit_rate_alert():
     tel, _ = _monitored_drive(
         plan, pool=scheduler.WarmPool(ttl=300.0, prewarmed=48))
     metrics = {a.metric for a in tel.health.alerts}
-    assert "pool.hit_rate" in metrics, \
+    assert "pool.phase_hit_rate" in metrics, \
         f"pool death fired no hit-rate alert (got {metrics})"
 
 

@@ -338,7 +338,7 @@ def test_fleet_telemetry_is_observation_only():
 def test_pool_snapshot():
     pool = WarmPool(ttl=10.0, prewarmed=3)
     assert pool.snapshot(0.0) == {"warm_hits": 0, "cold_starts": 0,
-                                  "free": 3, "containers": 3}
+                                  "killed": 0, "free": 3, "containers": 3}
     pool.acquire(1.0)
     snap = pool.snapshot(1.0)
     assert snap["warm_hits"] == 1 and snap["free"] == 2
