@@ -104,7 +104,7 @@ def _two_regime_cell(telemetry=None) -> SimClock:
 
 def _chaos_drive(faults=None, *, policy="wait_all", num_workers=CHAOS_WORKERS,
                  flops=FLOPS_PER_WORKER, k=None, memory_gb=0.5,
-                 prewarmed=CHAOS_WORKERS) -> SimClock:
+                 prewarmed=CHAOS_WORKERS, telemetry=None) -> SimClock:
     """The fixed chaos workload: CHAOS_ROUNDS phases on a warm-pooled
     fleet.  Every phase declares a 1 GB working set against a 0.5 GB
     Lambda — inert unless an OomSpec is in the plan, exactly the trap the
@@ -112,7 +112,7 @@ def _chaos_drive(faults=None, *, policy="wait_all", num_workers=CHAOS_WORKERS,
     pool = scheduler.WarmPool(ttl=300.0, prewarmed=prewarmed)
     clock = SimClock(StragglerModel(p_tail=0.05, tail_hi=3.0),
                      fleet=FleetConfig(cold_start_prob=0.3),
-                     pool=pool, faults=faults)
+                     pool=pool, faults=faults, telemetry=telemetry)
     for r in range(CHAOS_ROUNDS):
         clock.phase(jax.random.PRNGKey(9000 + r), num_workers,
                     policy=policy, k=k, flops_per_worker=flops,
@@ -218,6 +218,27 @@ def run(quick: bool = True):
         chaos_row(f"chaos_{scen}", _chaos_drive(plan))
         chaos_row(f"chaos_{scen}_mitigated",
                   _chaos_drive(plan, **CHAOS_MITIGATIONS[scen]))
+
+    # Incident-attribution smoke (repro.obs.incident): a mid-run AZ burst
+    # under live monitors must attribute back to az_burst, and running
+    # the attribution pipeline must change no simulated totals.  CI's
+    # bench-smoke asserts cause_match and attribution_inert off this row.
+    def _burst_plan():
+        return get_scenario("az_burst", kill_fraction=0.85,
+                            t_start=0.5 * healthy.time,
+                            t_end=0.5 * healthy.time + 3.0)
+
+    atel = obs.Telemetry(monitors=True)
+    attributed = _chaos_drive(_burst_plan(), telemetry=atel)
+    incidents = obs.attribute(atel, faults=_burst_plan())
+    plain_burst = _chaos_drive(_burst_plan())
+    top = incidents[0].cause if incidents else "none"
+    chaos_row("chaos_attributed", attributed,
+              incidents=len(incidents), top_cause=top,
+              cause_match=int(top == "az_burst"),
+              attribution_inert=int(attributed.time == plain_burst.time
+                                    and attributed.dollars
+                                    == plain_burst.dollars))
 
     # Corruption: silent wrong results only matter where something decodes
     # them, so this cell is an end-to-end coded Newton solve.  Blind

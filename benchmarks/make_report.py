@@ -7,12 +7,22 @@ render telemetry tables from an obs JSONL export, or diff two BENCH files.
       --trace artifacts/run.perfetto.jsonl
   PYTHONPATH=src python -m benchmarks.make_report \
       --diff BENCH_kernels.prev.json BENCH_kernels.json
+  PYTHONPATH=src python -m benchmarks.make_report \
+      --console artifacts/run.perfetto.jsonl --bench BENCH_fleet.json \
+      --out artifacts/console.html
 
 ``--trace`` takes the JSONL sibling that ``benchmarks.run --trace-out``
 writes next to the Perfetto file, and renders the per-phase time/dollar
 breakdown, a critical-path/slack table per recorded iteration DAG, and —
 when health monitors were attached — the alert log and per-detector state
 (via ``repro.obs``; same formatter the benchmark summaries share).
+Incident rows (``repro.obs.incident``) get their own narrative section.
+
+``--console`` takes the same JSONL and renders the self-contained HTML
+fleet console (``repro.obs.console``): span timeline, incident
+narratives with evidence links, per-tenant SLO burn charts, and — with
+``--bench`` — the benchmark row table.  No external assets; CI archives
+the file as a build artifact.
 
 ``--diff`` renders the noise-aware row-by-row comparison from
 ``repro.obs.diff`` (report-only; CI gates via ``repro.obs.diff --gate``).
@@ -99,6 +109,10 @@ def trace_report(rows):
             out.append(obs.alert_table(rows))
             out.append("")
         out.append(obs.detector_table(rows))
+    incidents = [r for r in rows if r.get("kind") == "incident"]
+    if incidents:
+        out.append(f"\n### Incidents: {len(incidents)} attributed\n")
+        out.append(obs.incident_table(incidents))
     return "\n".join(out)
 
 
@@ -121,11 +135,35 @@ def main(argv=None):
     ap.add_argument("--diff", type=str, nargs=2, default=None,
                     metavar=("BASE", "NEW"),
                     help="render a noise-aware diff of two BENCH_*.json")
+    ap.add_argument("--console", type=str, default=None,
+                    help="obs JSONL export -> self-contained HTML fleet "
+                         "console (span timeline, incidents, SLO burn)")
+    ap.add_argument("--bench", type=str, default=None,
+                    help="BENCH_*.json whose rows the console tabulates "
+                         "(only with --console)")
     ap.add_argument("--out", type=str, default=None)
     args = ap.parse_args(argv)
-    modes = sum(bool(m) for m in (args.single, args.trace, args.diff))
+    modes = sum(bool(m) for m in (args.single, args.trace, args.diff,
+                                  args.console))
     if modes != 1:
-        ap.error("pass exactly one of --single / --trace / --diff")
+        ap.error("pass exactly one of --single / --trace / --diff / "
+                 "--console")
+
+    if args.console:
+        from repro import obs
+        rows = obs.load_jsonl(args.console)
+        bench_rows = None
+        if args.bench:
+            with open(args.bench) as f:
+                bench_rows = json.load(f).get("rows", [])
+        text = obs.render_console(rows, bench=bench_rows,
+                                  title="fleet console")
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text)
+        else:
+            print(text)
+        return 0
 
     if args.trace or args.diff:
         if args.trace:

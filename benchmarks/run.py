@@ -85,7 +85,17 @@ def main(argv=None) -> int:
     ap.add_argument("--store", type=str, default=None,
                     help="append each persisted BENCH payload to this "
                          "cross-run JSONL store (repro.obs.store)")
+    ap.add_argument("--console-out", type=str, default=None,
+                    help="render the --trace-out run's telemetry (its "
+                         ".jsonl sibling) plus the written BENCH rows "
+                         "into a self-contained HTML fleet console "
+                         "(repro.obs.console); bare filenames go under "
+                         "artifacts/")
     args = ap.parse_args(argv)
+
+    if args.console_out and not args.trace_out:
+        ap.error("--console-out needs --trace-out (the console renders "
+                 "the trace's .jsonl sibling)")
 
     mods = MODULES
     if args.only:
@@ -192,6 +202,26 @@ def main(argv=None) -> int:
                 print(f"# appended {mod_name} to {store.path}",
                       file=sys.stderr)
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if args.console_out:
+        from repro.obs import console as obs_console
+        from repro.obs import export as obs_export
+
+        trace_path = str(_artifact_path(args.trace_out))
+        jsonl = (trace_path[:-5] if trace_path.endswith(".json")
+                 else trace_path) + ".jsonl"
+        try:
+            rows = obs_export.load_jsonl(jsonl)
+        except OSError as e:
+            print(f"# console: no trace JSONL at {jsonl} ({e})",
+                  file=sys.stderr)
+            rows = []
+        bench_rows = [r for payload in written.values()
+                      for r in payload["rows"]]
+        out = _artifact_path(args.console_out)
+        obs_console.write_console(out, rows, bench=bench_rows or None,
+                                  title="fleet console")
+        print(f"# wrote console {out}", file=sys.stderr)
     return 1 if failures else 0
 
 

@@ -107,9 +107,15 @@ def _traced_newton_row(trace_out: str, iters: int):
     t_plain, c_plain = _newton_end_to_end("dag", iters)
     tel = obs.Telemetry(monitors=True)
     t_dag, c_dag = _newton_end_to_end("dag", iters, telemetry=tel)
-    trace = obs.to_perfetto(tel.trace.spans)
+    # Attribute any alerts before export so incident rows land in the
+    # JSONL (and thus in make_report --trace / the HTML console), and
+    # ship the timestamped gauge streams as Perfetto counter tracks.
+    incidents = obs.attribute(tel)
+    counters = obs.counter_series(tel)
+    trace = obs.to_perfetto(tel.trace.spans, counters=counters)
     obs.perfetto.validate_trace(
-        trace, require_phases=("hessian", "linesearch", "grad/0:X"))
+        trace, require_phases=("hessian", "linesearch", "grad/0:X"),
+        require_counters=tuple(sorted(counters))[:1])
     obs.dump_perfetto(trace, trace_out)
     jsonl = (trace_out[:-5] if trace_out.endswith(".json") else trace_out) \
         + ".jsonl"
@@ -120,7 +126,8 @@ def _traced_newton_row(trace_out: str, iters: int):
         "sched_newton_traced", t_dag * 1e6, sim_s=t_dag, usd=c_dag,
         spans=len(tel.trace.spans),
         events=len(trace["traceEvents"]),
-        alerts=len(tel.health.alerts),
+        alerts=len(tel.health.alerts), incidents=len(incidents),
+        counter_tracks=len(counters),
         recorder_inert=int(t_dag == t_plain and c_dag == c_plain)) \
         | {"path": "dag"}
 

@@ -23,6 +23,11 @@ completed-jobs-per-second, job latency tail, and total dollars
   - ``burst``: the whole workload arrives in ~1 simulated second — peak
     in-flight concurrency ~= the full job count, the "thousands of
     concurrent jobs" regime of the ROADMAP item.
+  - ``budget_slo``: per-tenant error budgets (``repro.obs.slo``) with
+    budget-aware admission — a tenant whose SLO burn pages sheds *its
+    own* arrivals while every other tenant rides undisturbed; a sibling
+    check shows tracking alone (``budget_aware=False``) is pure
+    observation (bit-identical totals with and without SLO policies).
 
 A final self-check row re-runs one policy cell twice and reports
 bit-identity of (seconds, dollars, warm/cold phase log) — the tenancy
@@ -30,12 +35,15 @@ determinism contract, continuously measured.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
 
 from benchmarks.common import json_row
+from repro import obs
 from repro.core.straggler import SimClock, StragglerModel
+from repro.obs.slo import SloPolicy
 from repro.runtime import FleetConfig
 from repro.scheduler.pool import WarmPool
 from repro.tenancy import (AdmissionPolicy, Autoscaler, JobScheduler,
@@ -118,6 +126,35 @@ def run(quick: bool = True):
     rows.append(_row("tenancy_burst", time.time() - t0, res,
                      pool=burst_pool))
 
+    # Error-budget plane (repro.obs.slo): a deliberately-tight serving
+    # objective burns its budget; budget-aware admission sheds exactly
+    # that tenant's arrivals once fast+slow burn both page.
+    slo_policies = {
+        "serving": SloPolicy(latency_target_s=0.15, deadline_rate=0.9,
+                             fast_window_s=10.0, slow_window_s=40.0),
+        "batch": SloPolicy(latency_target_s=60.0, deadline_rate=0.5),
+        "train": SloPolicy(latency_target_s=60.0, deadline_rate=0.5),
+    }
+    budget_adm = AdmissionPolicy(max_inflight=256, queue=True,
+                                 slo_aware=False, budget_aware=True)
+    tel = obs.Telemetry()
+    pool = WarmPool(ttl=POOL_TTL, prewarmed=POOL_PREWARMED)
+    t0 = time.time()
+    clock = SimClock(StragglerModel(), fleet=FLEET, pool=pool,
+                     telemetry=tel)
+    res = JobScheduler(clock, jax.random.PRNGKey(SEED), jobs,
+                       TenancyConfig(admission=budget_adm, pool_aware=True,
+                                     slo=slo_policies)).run()
+    shed = sum(c.value for n, c in tel.metrics.counters.items()
+               if n.endswith(".budget_shed"))
+    summ = tel.slo.summary()
+    row = _row("tenancy_budget_slo", time.time() - t0, res, pool=pool)
+    row["derived"] += (f";budget_shed={int(shed)}"
+                       + "".join(f";{t}_budget="
+                                 f"{summ[t]['budget_remaining']:.3f}"
+                                 for t in sorted(summ)))
+    rows.append(row)
+
     # Determinism self-check: same seed + same trace, twice, smaller run
     # (the contract is bit-identity, not speed).
     small = generate_workload(WorkloadConfig(seed=SEED, rate=rate,
@@ -129,6 +166,13 @@ def run(quick: bool = True):
                config=cfg)
     exact = int(a.seconds == b.seconds and a.dollars == b.dollars
                 and a.phase_log == b.phase_log)
+    # SLO tracking alone must be pure observation: attach the policies
+    # with budget_aware off and nothing simulated may move.
+    c = _drive(small, pool=WarmPool(ttl=POOL_TTL, prewarmed=32),
+               config=dataclasses.replace(cfg, slo=slo_policies))
+    slo_inert = int(c.seconds == a.seconds and c.dollars == a.dollars
+                    and c.phase_log == a.phase_log)
     rows.append(json_row("tenancy_determinism", a.seconds * 1e6,
-                         sim_s=a.seconds, usd=a.dollars, exact=exact))
+                         sim_s=a.seconds, usd=a.dollars, exact=exact,
+                         slo_inert=slo_inert))
     return rows

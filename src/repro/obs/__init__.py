@@ -31,12 +31,18 @@ from repro.obs.export import (alert_table, alerts_from_rows,
                               telemetry_rows)
 from repro.obs.health import (Alert, Cusum, HealthMonitors, RobustZScore,
                               Rule, default_rules)
+from repro.obs.incident import (CAUSES, Evidence, Incident, IncidentConfig,
+                                attribute, attribute_rows, dump_incidents,
+                                incident_rows, incident_table)
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                NullMetrics)
-from repro.obs.perfetto import (dumps_stable, to_perfetto, validate_file,
-                                validate_trace)
+from repro.obs.perfetto import (counter_series, dumps_stable, to_perfetto,
+                                validate_file, validate_trace)
 from repro.obs.perfetto import dump as dump_perfetto
+from repro.obs.console import render as render_console
+from repro.obs.console import write_console
 from repro.obs.diff import DiffReport, RowDiff, diff_bench, diff_rows, diff_store
+from repro.obs.slo import SloPolicy, SloTracker
 from repro.obs.span import NullTracer, Span, SpanTracer
 from repro.obs.store import (Store, bench_record, config_hash, git_sha,
                              run_record)
@@ -55,8 +61,16 @@ class Telemetry:
 
     def __init__(self, monitors=None):
         self.trace = SpanTracer()
-        self.metrics = MetricsRegistry()
+        # Gauges/histograms timestamp their points off the span tracer's
+        # simulated-clock high-water mark — what counter tracks and SLO
+        # burn charts plot against.
+        self.metrics = MetricsRegistry(
+            timesource=lambda: self.trace.last_time)
         self.health = None
+        # Set by repro.obs.incident.attribute / repro.tenancy's scheduler
+        # when those planes run; exports pick them up via getattr.
+        self.incidents = None
+        self.slo = None
         if monitors is True:
             monitors = HealthMonitors()
         if monitors is not None:
@@ -68,6 +82,8 @@ class _NullTelemetry:
 
     enabled = False
     health = None
+    incidents = None
+    slo = None
 
     def __init__(self):
         self.trace = NullTracer()
@@ -87,9 +103,13 @@ __all__ = [
     "DiffReport", "RowDiff", "diff_bench", "diff_rows", "diff_store",
     "CriticalPathReport", "PhaseSlack", "critical_path", "from_dag",
     "to_perfetto", "dumps_stable", "dump_perfetto", "validate_trace",
-    "validate_file",
+    "validate_file", "counter_series",
     "telemetry_rows", "dump_jsonl", "load_jsonl", "format_table",
     "phase_table", "phase_summary_rows", "critical_path_table",
     "dag_reports_from_rows", "bench_rows_table",
     "alert_table", "alerts_from_rows", "detector_table",
+    "CAUSES", "Evidence", "Incident", "IncidentConfig", "attribute",
+    "attribute_rows", "dump_incidents", "incident_rows", "incident_table",
+    "SloPolicy", "SloTracker",
+    "render_console", "write_console",
 ]

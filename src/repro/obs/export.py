@@ -25,13 +25,20 @@ from repro.obs.span import Span
 # ----------------------------------------------------------------- JSONL
 def telemetry_rows(telemetry) -> List[dict]:
     """Span rows, health-monitor alert/state rows (when monitors are
-    attached), then one metrics row — JSON-ready."""
+    attached), attributed incident rows (``repro.obs.incident``), SLO
+    rows (``repro.obs.slo``), then one metrics row — JSON-ready."""
     rows = [s.as_row() for s in telemetry.trace.spans]
     health = getattr(telemetry, "health", None)
     if health is not None:
         rows.extend(a.as_row() for a in health.alerts)
         rows.append({"kind": "health", "detectors": health.state_rows(),
                      **health.summary()})
+    incidents = getattr(telemetry, "incidents", None)
+    if incidents:
+        rows.extend(inc.as_row() for inc in incidents)
+    slo = getattr(telemetry, "slo", None)
+    if slo is not None:
+        rows.extend(slo.rows())
     rows.append({"kind": "metrics", **telemetry.metrics.snapshot()})
     return rows
 

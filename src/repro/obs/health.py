@@ -326,6 +326,30 @@ class HealthMonitors:
                     score=float(score), direction=direction)
 
     # -------------------------------------------------------------- export
+    def alert_windows(self, merge_gap: float = 1.0
+                      ) -> List[Tuple[float, float, List[Alert]]]:
+        """Cluster alerts into time windows: consecutive alerts closer
+        than ``merge_gap`` simulated seconds share one window.  Returns
+        ``(t_start, t_end, alerts)`` triples in time order — the unit of
+        attribution for ``repro.obs.incident``."""
+        if not self.alerts:
+            return []
+        ordered = sorted(self.alerts, key=lambda a: (a.t, a.metric,
+                                                     a.detector))
+        windows: List[Tuple[float, float, List[Alert]]] = []
+        t0 = t1 = ordered[0].t
+        bucket = [ordered[0]]
+        for a in ordered[1:]:
+            if a.t - t1 <= merge_gap:
+                t1 = a.t
+                bucket.append(a)
+            else:
+                windows.append((t0, t1, bucket))
+                t0 = t1 = a.t
+                bucket = [a]
+        windows.append((t0, t1, bucket))
+        return windows
+
     def state_rows(self) -> List[dict]:
         """Per-detector state for reports and the JSONL ``health`` row."""
         rows = []

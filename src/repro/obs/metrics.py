@@ -28,6 +28,16 @@ streaming anomaly detectors are the shipped one).  Every instrument update
 forwards through it, which is what makes online monitoring possible
 without a second instrumentation pass; a listener is itself pure
 observation and must never mutate the run.
+
+It may also carry a ``timesource`` — a zero-argument callable returning
+the current simulated time (``Telemetry`` wires it to the span tracer's
+``last_time`` high-water mark).  When present, every gauge ``set`` and
+histogram ``observe`` also appends a ``(t, value)`` point to the
+instrument's ``points`` list, which is what the Perfetto counter-track
+export (``obs.counter_series``) and the console's burn charts render.
+Reading a high-water mark draws no randomness and moves no clock, so the
+observation-only contract is untouched; without a timesource (the
+default for a bare ``MetricsRegistry()``) nothing extra is recorded.
 """
 from __future__ import annotations
 
@@ -58,13 +68,20 @@ class Gauge:
     name: str = ""
     registry: Optional["MetricsRegistry"] = dataclasses.field(
         default=None, repr=False, compare=False)
+    #: (t, value) pairs, recorded only when the registry has a timesource.
+    points: List[tuple] = dataclasses.field(default_factory=list,
+                                            compare=False)
 
     def set(self, v: float) -> None:
         self.value = float(v)
         self.series.append(self.value)
         reg = self.registry
-        if reg is not None and reg.listener is not None:
-            reg.listener.on_metric("gauge", self.name, self.value, self.value)
+        if reg is not None:
+            if reg.timesource is not None:
+                self.points.append((float(reg.timesource()), self.value))
+            if reg.listener is not None:
+                reg.listener.on_metric("gauge", self.name, self.value,
+                                       self.value)
 
 
 @dataclasses.dataclass
@@ -73,12 +90,18 @@ class Histogram:
     name: str = ""
     registry: Optional["MetricsRegistry"] = dataclasses.field(
         default=None, repr=False, compare=False)
+    #: (t, value) pairs, recorded only when the registry has a timesource.
+    points: List[tuple] = dataclasses.field(default_factory=list,
+                                            compare=False)
 
     def observe(self, v: float) -> None:
         self.values.append(float(v))
         reg = self.registry
-        if reg is not None and reg.listener is not None:
-            reg.listener.on_metric("hist", self.name, float(v), float(v))
+        if reg is not None:
+            if reg.timesource is not None:
+                self.points.append((float(reg.timesource()), float(v)))
+            if reg.listener is not None:
+                reg.listener.on_metric("hist", self.name, float(v), float(v))
 
     @property
     def count(self) -> int:
@@ -106,7 +129,7 @@ class Histogram:
 class MetricsRegistry:
     enabled = True
 
-    def __init__(self, listener=None):
+    def __init__(self, listener=None, timesource=None):
         self.counters: Dict[str, Counter] = {}
         self.gauges: Dict[str, Gauge] = {}
         self.histograms: Dict[str, Histogram] = {}
@@ -115,6 +138,9 @@ class MetricsRegistry:
         # after instruments already exist; they all hold a registry
         # back-reference, so late attachment sees every later update.
         self.listener = listener
+        # Optional zero-arg simulated-clock reader; when set, gauges and
+        # histograms keep timestamped (t, value) points (module docstring).
+        self.timesource = timesource
 
     def counter(self, name: str) -> Counter:
         return self.counters.setdefault(name,
@@ -145,6 +171,7 @@ class _NullInstrument:
     value = 0.0
     values: List[float] = []
     series: List[float] = []
+    points: List[tuple] = []
     count = 0
     total = 0.0
 
@@ -172,6 +199,8 @@ class NullMetrics:
     counters: Dict[str, Counter] = {}
     gauges: Dict[str, Gauge] = {}
     histograms: Dict[str, Histogram] = {}
+    listener = None
+    timesource = None
 
     def counter(self, name: str) -> _NullInstrument:
         return _NULL_INSTRUMENT

@@ -25,9 +25,14 @@ from typing import Dict, List, Optional
 #: Span kinds, outermost first.  ``track`` is only meaningful for
 #: worker-lifecycle kinds (it names the Perfetto worker track).  ``alert``
 #: spans are zero-duration markers the health monitors drop into the tree
-#: at the simulated instant an anomaly was detected; the Perfetto exporter
-#: skips them (they live in the JSONL export and report tables).
-KINDS = ("run", "iteration", "phase", "charge", "attempt", "alert")
+#: at the simulated instant an anomaly was detected; ``job`` spans cover a
+#: tenant job's arrival-to-finish interval (``repro.tenancy``); and
+#: ``incident`` spans cover an attributed alert window (``repro.obs.
+#: incident``), linking the ranked cause back to the timeline.  The
+#: Perfetto exporter skips alert/job/incident kinds (they live in the
+#: JSONL export, the report tables, and the HTML console).
+KINDS = ("run", "iteration", "phase", "charge", "attempt", "alert", "job",
+         "incident")
 
 
 @dataclasses.dataclass

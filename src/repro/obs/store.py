@@ -152,6 +152,16 @@ def run_record(name: str, telemetry, *, backend: str = "unknown",
         rec["alerts"] = [a.as_row() for a in health.alerts]
         rec["health"] = health.summary()
 
+    # Attributed incidents (repro.obs.incident) and per-tenant SLO budget
+    # state (repro.obs.slo), when the run carried them — the cross-run
+    # store is where "which cause recurs across commits?" gets answered.
+    incidents = getattr(telemetry, "incidents", None)
+    if incidents:
+        rec["incidents"] = [inc.as_row() for inc in incidents]
+    slo = getattr(telemetry, "slo", None)
+    if slo is not None:
+        rec["slo"] = slo.summary()
+
     if extra:
         rec.update(extra)
     return rec

@@ -351,7 +351,8 @@ class FleetEngine:
                          stats: Optional[dict],
                          extra_attempts: Optional[list], *,
                          cost_model: Optional[CostModel] = None,
-                         replayed: bool = False) -> None:
+                         replayed: bool = False,
+                         corrupted=None) -> None:
         """Emit one phase's span tree + metrics.  Pure observation of
         already-computed values — no RNG, no clock movement."""
         tel = self.telemetry
@@ -364,6 +365,23 @@ class FleetEngine:
             attrs["k"] = int(k)
         if replayed:
             attrs["replayed"] = True
+        # Per-phase injected-fault signature: the nonzero fault counters
+        # of THIS phase, attached to its span so the incident engine
+        # (repro.obs.incident) can correlate an alert window with what
+        # the chaos plane actually did there.  Plan-less runs never have
+        # a "faults" stats dict, so healthy spans (and the committed
+        # golden Perfetto fixture) are unchanged.
+        injected = {kk: int(v)
+                    for kk, v in sorted(((stats or {}).get("faults")
+                                         or {}).items())
+                    if kk not in ("throttle_waits", "burst_exposed",
+                                  "peak_concurrency") and v}
+        if corrupted is not None and bool(corrupted.any()):
+            injected["corrupted_workers"] = int(corrupted.sum())
+        if injected:
+            attrs["faults"] = injected
+        if stats is not None and stats.get("exhausted"):
+            attrs["exhausted"] = int(stats["exhausted"])
         pid = tel.trace.emit(name, "phase", start, start + elapsed, **attrs)
 
         m = tel.metrics
@@ -642,7 +660,8 @@ class FleetEngine:
             self._phase_telemetry(
                 phase_name or f"phase{self._phase_idx}", phase_deps, t0,
                 elapsed, policy, num_workers, k, entry, stats,
-                extra_attempts, cost_model=cost_model)
+                extra_attempts, cost_model=cost_model,
+                corrupted=corrupted)
             if raised:
                 tel.metrics.counter("fleet.exhausted_phases").inc()
         if self.recorder is not None:

@@ -161,6 +161,48 @@ class FaultPlan:
             self.burst, self.throttle, self.s3, self.oom, self.pool_death,
             self.corruption))
 
+    def events(self) -> list:
+        """Declared fault windows as typed, JSON-ready dicts.
+
+        This is the incident engine's ground-truth evidence stream
+        (``repro.obs.incident``): each dict names the cause the window
+        would produce, its ``[t_start, t_end)`` extent in absolute
+        simulated seconds (``t_end: None`` for an open window — OOM and
+        pool death have effects that persist to the end of the run), and
+        a human-readable knob summary.  Deterministic: pure function of
+        the plan's specs, sorted by (t_start, cause).
+        """
+        out = []
+
+        def win(cause: str, t0: float, t1: float, detail: str) -> None:
+            out.append({"cause": cause, "t_start": float(t0),
+                        "t_end": None if math.isinf(t1) else float(t1),
+                        "detail": detail})
+
+        if self.burst is not None:
+            b = self.burst
+            win("az_burst", b.t_start, b.t_end,
+                f"kill_fraction={b.kill_fraction}")
+        if self.throttle is not None:
+            th = self.throttle
+            win("throttle", th.t_start, th.t_end,
+                f"max_concurrent={th.max_concurrent}")
+        if self.s3 is not None:
+            s = self.s3
+            win("s3_transient", s.t_start, s.t_end,
+                f"get_fail={s.get_fail_prob},put_fail={s.put_fail_prob}")
+        if self.oom is not None:
+            o = self.oom
+            win("oom", 0.0, math.inf,
+                f"kill_at={o.kill_at_fraction},escalate={o.escalate}")
+        if self.pool_death is not None:
+            p = self.pool_death
+            win("pool_death", p.t, math.inf, f"fraction={p.fraction}")
+        if self.corruption is not None:
+            c = self.corruption
+            win("corruption", c.t_start, c.t_end, f"prob={c.prob}")
+        return sorted(out, key=lambda e: (e["t_start"], e["cause"]))
+
 
 class PhaseExhaustedError(RuntimeError):
     """A phase's retry budget truly ran out (``fail_open=False``).

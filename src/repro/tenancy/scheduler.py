@@ -63,6 +63,13 @@ class AdmissionPolicy:
     queue: bool = True            # hold for a slot (FIFO) vs reject at cap
     slo_aware: bool = True        # reject jobs whose estimate misses SLO
     est_safety: float = 1.5       # multiplier on the median-CPM estimate
+    # Error-budget-aware shedding (repro.obs.slo): when the run carries
+    # per-tenant SLO policies (TenancyConfig.slo), reject arrivals from
+    # exactly the tenant whose budget is exhausted or whose fast+slow
+    # burn windows are both paging — the burning tenant sheds, everyone
+    # else is untouched.  Off by default: SLO tracking alone is pure
+    # observation; this flag is the explicit opt-in that lets it steer.
+    budget_aware: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +95,11 @@ class TenancyConfig:
     autoscaler: Optional[Autoscaler] = None
     pool_aware: bool = False
     slack_safety: float = 1.0     # fraction of static slack spendable
+    # Per-tenant objectives (tenant name -> repro.obs.slo.SloPolicy).
+    # When set, a SloTracker folds every completed job into error budgets
+    # and burn rates; AdmissionPolicy.budget_aware decides whether that
+    # state may also shed arrivals.  None = no SLO plane (default).
+    slo: Optional[Dict[str, "object"]] = None
 
 
 @dataclasses.dataclass
@@ -264,6 +276,16 @@ class JobScheduler:
         self._last_arrival: Optional[float] = None
         self._ewma_gap: Optional[float] = None
         self._ewma_demand: Optional[float] = None
+        # --- per-tenant SLO plane (repro.obs.slo)
+        self.slo_tracker = None
+        if config.slo:
+            from repro.obs.slo import SloTracker
+            self.slo_tracker = SloTracker(config.slo,
+                                          telemetry=clock.telemetry)
+            # Surface the tracker on the telemetry so exports/store pick
+            # it up — but never set attributes on the shared obs.NULL.
+            if getattr(clock.telemetry, "enabled", False):
+                clock.telemetry.slo = self.slo_tracker
 
     # --------------------------------------------------------- telemetry
     @property
@@ -333,6 +355,11 @@ class JobScheduler:
 
     def _try_admit(self, heap, job: Job, t: float) -> None:
         adm = self.config.admission
+        if (adm.budget_aware and self.slo_tracker is not None
+                and self.slo_tracker.should_shed(job.tenant, t)):
+            self._reject(job)
+            self._m.counter(f"tenant.{job.tenant}.budget_shed").inc()
+            return
         if adm.slo_aware and job.deadline is not None:
             start = (t if len(self._inflight) < adm.max_inflight
                      else self._predicted_start(t, len(self._fifo)))
@@ -458,12 +485,26 @@ class JobScheduler:
         tled = self._tenant_ledger(job.tenant)
         m.gauge(f"tenant.{job.tenant}.dollars").set(
             tled.dollars(self.engine.cost_model))
+        extra = {}
+        if self.slo_tracker is not None:
+            # Fold the outcome into the tenant's error budget, and stamp
+            # the job span with a warm-pool snapshot so incident
+            # attribution can see the pool state each job finished under.
+            self.slo_tracker.record_job(
+                job.tenant, t, rec.latency or 0.0,
+                deadline_missed=(rec.deadline is not None
+                                 and t > rec.deadline),
+                failed=rec.failed, dollars=rec.dollars)
+            extra["budget_remaining"] = self.slo_tracker.budget_remaining(
+                job.tenant)
+            if self.pool is not None:
+                extra["pool_free"] = self.pool.free_at(t)
         self.clock.telemetry.trace.emit(
             f"job/{job.tenant}/{job_id}", "job", job.t_arrival, t,
             track=f"tenant/{job.tenant}", tenant=job.tenant,
             template=job.template.name, latency=rec.latency,
             queue_wait=rec.queue_wait, failed=rec.failed,
-            slo_missed=rec.slo_missed)
+            slo_missed=rec.slo_missed, **extra)
 
     # --------------------------------------------------------------- run
     def run(self) -> FleetResult:

@@ -302,6 +302,19 @@ def _assert_telemetry_inert(drive, rows, *, want_phases):
     # replay stays silent.
     assert monitored_tel.metrics.listener is monitored_tel.health is not None
     assert monitored_tel.health.alerts == []
+    # Incident attribution on top is observation-only too: running the
+    # full alert->cause pipeline after the fact consumes only recorded
+    # telemetry (no clock reads, no randomness), so the replayed totals
+    # cannot move — and a second attribution of the same telemetry
+    # yields identical incident rows (determinism of the attributor).
+    first = [i.as_row() for i in obs.attribute(monitored_tel)]
+    assert monitored.time == plain.time
+    assert monitored.dollars == plain.dollars
+    again = obs.attribute_rows(
+        [s.as_row() for s in monitored_tel.trace.spans
+         if s.kind != "incident"],
+        [a.as_row() for a in monitored_tel.health.alerts])
+    assert [i.as_row() for i in again] == first
 
 
 def test_golden_fixture_replays_identically_with_telemetry():
